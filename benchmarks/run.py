@@ -1,0 +1,84 @@
+"""Benchmark harness: one function per paper table/figure + compiler-throughput
+and roofline summaries. Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def _timed(fn, repeats=1):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn()
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6
+
+
+def main() -> None:
+    from benchmarks import paper_figs
+
+    print("name,us_per_call,derived")
+    for fn in paper_figs.ALL:
+        (rows, derived), us = _timed(fn)
+        print(f"{fn.__name__},{us:.0f},\"{derived}\"")
+
+    # compiler throughput: vmap'd characterization of the whole design space
+    from repro.core import dse as dse_mod
+
+    def sweep():
+        cfgs = dse_mod.design_space()
+        return dse_mod.evaluate_space(cfgs), len(cfgs)
+
+    (res, n), us = _timed(sweep)
+    print(f"characterize_design_space,{us:.0f},\"{n} configs PPA+retention "
+          f"({us / max(n,1):.0f} us/config incl. transient solve)\"")
+
+    # Pallas retention kernel (interpret mode on CPU)
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels.retention_kernel import retention_pallas
+    from repro.core.retention import time_grid
+    rng = np.random.default_rng(0)
+    params = jnp.asarray(np.column_stack([
+        rng.uniform(0.4, 0.8, 256), np.full(256, 1.2),
+        np.full(256, 2e-6), np.full(256, 0.05), np.full(256, 1e-16),
+        np.full(256, 3e-15), np.full(256, 1e-15), np.full(256, 0.1),
+        rng.uniform(0.6, 1.1, 256), np.full(256, 0.5)]), jnp.float32)
+    ts = time_grid()
+    _, us = _timed(lambda: retention_pallas(params, ts, interpret=True)
+                   .block_until_ready())
+    print(f"retention_kernel_interpret,{us:.0f},\"256-config RK4 transient "
+          f"(Pallas interpret; TPU target is the native path)\"")
+
+    # per-arch heterogeneous-memory DSE (the paper's technique on our archs)
+    try:
+        from benchmarks.arch_dse import arch_dse_table
+        (rows, derived), us = _timed(arch_dse_table)
+        print(f"arch_dse,{us:.0f},\"{derived}\"")
+    except Exception as e:
+        print(f"arch_dse,0,\"skipped: {e}\"")
+
+    # roofline table from dry-run artifacts (if present)
+    try:
+        from repro.launch.roofline import load_table
+        rows = load_table()
+        if rows:
+            worst = min(rows, key=lambda r: r["roofline_fraction"])
+            bound = {}
+            for r in rows:
+                bound[r["bottleneck"]] = bound.get(r["bottleneck"], 0) + 1
+            print(f"roofline_single_pod,0,\"{len(rows)} cells; bottlenecks "
+                  f"{bound}; worst fraction {worst['roofline_fraction']:.2%} "
+                  f"({worst['arch']}/{worst['shape']})\"")
+        else:
+            print("roofline_single_pod,0,\"no dry-run artifacts\"")
+    except Exception as e:  # artifacts may not exist in fresh checkouts
+        print(f"roofline_single_pod,0,\"skipped: {e}\"")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,33 @@
+"""Quickstart: generate, characterize and emit artifacts for a GCRAM macro.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import MacroConfig, characterize_config, generate_all
+
+
+def main():
+    cfg = MacroConfig(mem_type="gc_sisi", word_size=32, num_words=64,
+                      level_shift=True)
+    print(f"== OpenGCRAM-JAX quickstart: {cfg.mem_type} "
+          f"{cfg.word_size}x{cfg.num_words} (WWLLS={cfg.level_shift}) ==")
+    r = characterize_config(cfg)
+    print(f"area       {r['area_um2']:.0f} um^2")
+    print(f"f_read     {r['f_read_hz'] / 1e6:.0f} MHz   "
+          f"f_write {r['f_write_hz'] / 1e6:.0f} MHz")
+    print(f"bandwidth  {r['bandwidth_bits_s'] / 8e9:.2f} GB/s (read) / "
+          f"{r['bandwidth_total_bits_s'] / 8e9:.2f} GB/s (dual-port total)")
+    print(f"leakage    {r['p_leak_w'] * 1e6:.3f} uW   "
+          f"retention {r['retention_s']:.3e} s")
+    rep = generate_all(cfg, "artifacts/quickstart")
+    print(f"artifacts  -> artifacts/quickstart/  "
+          f"DRC {'clean' if rep['drc_clean'] else 'ERRORS'}, "
+          f"LVS {'clean' if rep['lvs_clean'] else 'ERRORS'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Serving example: batched prefill + decode with KV cache on a reduced
+hymba (hybrid attention+SSM) model — exercises ring/SWA caches and SSM state.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.models import LM
+from repro.serve.engine import Engine
+
+
+def main():
+    cfg = reduce_config(get_config("hymba-1.5b"))
+    lm = LM(cfg)
+    params = lm.init(jax.random.key(0))
+    eng = Engine(cfg, params, max_seq=96)
+
+    rng = np.random.default_rng(0)
+    batch = {"tokens": rng.integers(0, cfg.vocab_size, (4, 12)).astype(np.int32)}
+    t0 = time.time()
+    out = eng.generate(batch, steps=24, temperature=0.8, seed=0)
+    dt = time.time() - t0
+    print(f"generated {out.shape} tokens in {dt:.2f}s "
+          f"({out.size / dt:.1f} tok/s, batched, ring+SSM caches)")
+    for i, row in enumerate(out[:2]):
+        print(f"  request {i}: {row[:16].tolist()} ...")
+    print("greedy determinism check:",
+          np.array_equal(eng.generate(batch, steps=8),
+                         eng.generate(batch, steps=8)))
+
+
+if __name__ == "__main__":
+    main()

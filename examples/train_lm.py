@@ -1,0 +1,74 @@
+"""End-to-end driver: train a qwen3-style LM for a few hundred steps on CPU
+with the full production substrate (sharded AdamW, remat, checkpointing,
+fault-tolerant supervisor).
+
+The backbone is 100M-class once a production-size vocabulary is attached
+(~96M tied / 174M untied at vocab 151936 — check with --full-vocab); the
+driver ships with vocab 8192 (27.3M params) so 300 steps stay tractable on
+one CPU core.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+Result of the recorded 300-step run (artifacts/train_lm_300.log):
+    loss first10=9.41 -> last10=9.07, 6.7 s/step, 0 restarts.
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLMData
+from repro.runtime.supervisor import Supervisor, SupervisorConfig
+from repro.train.step import init_train_state, make_train_step
+
+
+def build_100m_cfg(full_vocab: bool = False):
+    """qwen3-family 100M-class config; reduced vocab keeps the CPU driver
+    tractable (embeddings dominate at this scale)."""
+    return get_config("qwen3-8b").replace(
+        num_layers=6, d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
+        d_ff=1536, vocab_size=151936 if full_vocab else 8192,
+        dtype="float32", attn_chunk=128)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="artifacts/train_lm_ckpt")
+    ap.add_argument("--full-vocab", action="store_true")
+    args = ap.parse_args()
+
+    cfg = build_100m_cfg(full_vocab=args.full_vocab)
+    lm, step = make_train_step(cfg, base_lr=3e-4, warmup=50,
+                               total_steps=args.steps)
+    step = jax.jit(step, donate_argnums=(0, 1))
+    params, opt = init_train_state(cfg, jax.random.key(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {n / 1e6:.1f}M params, {cfg.num_layers}L d={cfg.d_model}")
+
+    data = SyntheticLMData(cfg, args.batch, args.seq, seed=0)
+    sup = Supervisor(step, Checkpointer(args.ckpt_dir, keep=2),
+                     SupervisorConfig(ckpt_every=100))
+    t0 = time.time()
+    params, opt, report = sup.run(params, opt, data, total_steps=args.steps)
+    dt = time.time() - t0
+    losses = report.losses
+    print(f"steps={report.steps_run} restarts={report.restarts} "
+          f"time={dt:.1f}s ({dt / max(report.steps_run, 1):.2f}s/step)")
+    print(f"loss: first10={np.mean(losses[:10]):.4f} "
+          f"last10={np.mean(losses[-10:]):.4f}")
+    if args.steps >= 50:   # too noisy to assert on smoke-length runs
+        assert np.mean(losses[-10:]) < np.mean(losses[:10]), "loss did not improve"
+        print("OK: loss decreased; checkpoint at", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quick dev smoke: every arch, reduced config, one loss eval + prefill/decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ALL_ARCHS, get_config, reduce_config
+from repro.models import LM
+
+
+def make_batch(cfg, rng, B=2, S=32):
+    if cfg.audio_codebooks:
+        return {"codes": rng.integers(0, cfg.vocab_size, (B, cfg.audio_codebooks, S)).astype(np.int32),
+                "cond": rng.normal(size=(B, cfg.cond_len, cfg.cond_dim)).astype(np.float32)}
+    if cfg.vision:
+        return {"tokens": rng.integers(0, cfg.vocab_size, (B, S - cfg.num_patches)).astype(np.int32),
+                "patches": rng.normal(size=(B, cfg.num_patches, cfg.vision_dim)).astype(np.float32)}
+    if cfg.meta_tokens:
+        return {"tokens": rng.integers(0, cfg.vocab_size, (B, S - cfg.meta_tokens)).astype(np.int32)}
+    return {"tokens": rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)}
+
+
+def main(names):
+    rng = np.random.default_rng(0)
+    for name in names:
+        cfg = reduce_config(get_config(name))
+        lm = LM(cfg)
+        params = lm.init(jax.random.key(0))
+        n = sum(x.size for x in jax.tree.leaves(params))
+        batch = make_batch(cfg, rng)
+        loss, metrics = jax.jit(lm.loss)(params, batch)
+        ok1 = bool(jnp.isfinite(loss))
+        # prefill + decode
+        cache, logits = jax.jit(lambda p, b: lm.prefill(p, b, max_seq=48))(params, batch)
+        dec_in = {"tokens": np.zeros((2, cfg.audio_codebooks), np.int32)
+                  if cfg.audio_codebooks else np.zeros((2,), np.int32)}
+        if cfg.audio_codebooks:
+            dec_in["cond"] = batch["cond"]
+        logits2, cache = jax.jit(lm.decode)(params, cache, dec_in)
+        ok2 = bool(jnp.all(jnp.isfinite(logits2)))
+        print(f"{name:24s} params={n:9d} loss={float(loss):8.4f} "
+              f"finite={ok1} decode_finite={ok2} logits={logits2.shape}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ALL_ARCHS)

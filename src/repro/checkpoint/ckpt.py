@@ -1,0 +1,137 @@
+"""Checkpointing: atomic, async-capable, reshard-on-restore.
+
+Format: one .npz with path-flattened leaves + a JSON manifest (step, data
+state, tree structure, checksums). Writes go to a tmp dir + os.replace so a
+crash mid-write never corrupts the latest checkpoint. `restore(..., mesh=)`
+re-device_puts every leaf with the target mesh's shardings — this is what
+lets a 512-chip checkpoint restart on a 256-chip mesh after a pod loss
+(elastic downscale; see runtime.supervisor).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+SEP = "|"
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = SEP.join(str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+                       for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten_into(template, arrays: Dict[str, np.ndarray]):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        key = SEP.join(str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+                       for k in path)
+        arr = arrays[key]
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory, keep: int = 3, async_write: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, params, opt_state, data_state: Dict[str, Any],
+             block: bool = False):
+        params_np = _flatten(jax.device_get(params))
+        opt_np = _flatten(jax.device_get(opt_state))
+        self.wait()
+
+        def _write():
+            tmp = self.dir / f".tmp_step_{step}"
+            final = self.dir / f"step_{step}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            np.savez(tmp / "params.npz", **params_np)
+            np.savez(tmp / "opt.npz", **opt_np)
+            digest = hashlib.sha256()
+            for k in sorted(params_np):
+                digest.update(params_np[k].tobytes())
+            manifest = {
+                "step": step,
+                "data_state": data_state,
+                "time": time.time(),
+                "params_sha256": digest.hexdigest(),
+            }
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            if final.exists():
+                shutil.rmtree(final)
+            os.replace(tmp, final)                    # atomic publish
+            self._gc()
+
+        if self.async_write and not block:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def steps(self):
+        return [int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+                if (p / "manifest.json").exists()]
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return max(steps) if steps else None
+
+    def restore(self, step: Optional[int] = None, *, params_template=None,
+                opt_template=None, mesh=None, shardings=None):
+        """Returns (step, params, opt_state, data_state). With `shardings`
+        (pytrees of NamedSharding for the *target* mesh) leaves are placed
+        sharded — reshard-on-restore."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        params_np = dict(np.load(d / "params.npz"))
+        opt_np = dict(np.load(d / "opt.npz"))
+        digest = hashlib.sha256()
+        for k in sorted(params_np):
+            digest.update(params_np[k].tobytes())
+        if digest.hexdigest() != manifest["params_sha256"]:
+            raise IOError(f"checkpoint step_{step} failed checksum")
+        params = _unflatten_into(params_template, params_np) \
+            if params_template is not None else params_np
+        opt = _unflatten_into(opt_template, opt_np) \
+            if opt_template is not None else opt_np
+        if shardings is not None:
+            p_sh, o_sh = shardings
+            params = jax.tree.map(lambda x, s: jax.device_put(x, s), params, p_sh)
+            opt = jax.tree.map(lambda x, s: jax.device_put(x, s), opt, o_sh)
+        return manifest["step"], params, opt, manifest["data_state"]

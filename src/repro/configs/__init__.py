@@ -1,0 +1,26 @@
+"""Config registry: importing this package registers all assigned architectures."""
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    ShapeConfig,
+    SHAPES,
+    applicable_shapes,
+    get_config,
+    list_archs,
+    reduce_config,
+)
+
+# side-effect registration of the 10 assigned architectures
+from repro.configs import (  # noqa: F401
+    qwen3_32b,
+    qwen3_8b,
+    granite_34b,
+    internlm2_1_8b,
+    deepseek_v3_671b,
+    moonshot_v1_16b_a3b,
+    hymba_1_5b,
+    xlstm_125m,
+    phi3_vision_4_2b,
+    musicgen_medium,
+)
+
+ALL_ARCHS = list_archs()

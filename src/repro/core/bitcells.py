@@ -1,0 +1,109 @@
+"""Bitcell models: 6T SRAM, 2T Si-Si GCRAM, 2T OS-Si GCRAM, 2T OS-OS GCRAM.
+
+Each bitcell is a NamedTuple of jnp scalars so a stacked table of all cell
+types (x VT class x LS option) can be characterized under vmap. GCRAM cells
+follow the paper's polarity choice: NMOS write + PMOS read (active-high RWL
+boosts the storage node instead of degrading it — §4.2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import devices, tech
+
+
+class BitcellParams(NamedTuple):
+    kind: jnp.ndarray           # 0=sram6t 1=si-si 2=os-si 3=os-os
+    cell_w: jnp.ndarray         # um
+    cell_h: jnp.ndarray
+    w_write: jnp.ndarray        # write/access device width (um)
+    w_read: jnp.ndarray         # read device width (um)
+    c_sn: jnp.ndarray           # storage-node cap (F); 0 for SRAM
+    write_dev: jnp.ndarray      # index into the device stack
+    read_dev: jnp.ndarray
+    dual_port: jnp.ndarray      # 1 = separate read/write ports
+    leak_paths: jnp.ndarray     # static VDD->GND paths per cell (SRAM=2)
+
+
+KIND_SRAM, KIND_SISI, KIND_OSSI, KIND_OSOS = 0, 1, 2, 3
+
+# device stack order used by all bitcells
+DEVICE_ORDER = ("si_nmos", "si_nmos_hvt", "si_pmos", "ito_os", "ito_os_hvt",
+                "igzo_os")
+DEV = {n: i for i, n in enumerate(DEVICE_ORDER)}
+DEVICE_STACK = devices.stack_devices(DEVICE_ORDER)
+
+
+def _cell(kind, w, h, w_write, w_read, c_sn, wd, rd, dual, leaks):
+    return BitcellParams(*[jnp.asarray(v, jnp.float32) for v in
+                           (kind, w, h, w_write, w_read, c_sn, wd, rd, dual,
+                            leaks)])
+
+
+def sram6t():
+    return _cell(KIND_SRAM, tech.SRAM6T_W, tech.SRAM6T_H,
+                 w_write=0.12, w_read=0.15, c_sn=0.0,
+                 wd=DEV["si_nmos"], rd=DEV["si_nmos"], dual=0, leaks=2)
+
+
+def gc_sisi(hvt_write: bool = False):
+    wd = DEV["si_nmos_hvt"] if hvt_write else DEV["si_nmos"]
+    # SN cap: read-PMOS gate + write-NMOS junction + local wire
+    c_sn = (0.15 * tech.C_GATE_PER_UM + 0.12 * tech.C_JUNC_PER_UM + 0.35e-15)
+    return _cell(KIND_SISI, tech.GC_SISI_W, tech.GC_SISI_H,
+                 w_write=0.12, w_read=0.15, c_sn=c_sn,
+                 wd=wd, rd=DEV["si_pmos"], dual=1, leaks=0)
+
+
+def gc_ossi(hvt_write: bool = False):
+    wd = DEV["ito_os_hvt"] if hvt_write else DEV["ito_os"]
+    c_sn = (0.15 * tech.C_GATE_PER_UM + 0.10 * tech.C_JUNC_PER_UM + 0.35e-15)
+    return _cell(KIND_OSSI, tech.GC_OSSI_W, tech.GC_OSSI_H,
+                 w_write=0.10, w_read=0.15, c_sn=c_sn,
+                 wd=wd, rd=DEV["si_pmos"], dual=1, leaks=0)
+
+
+def gc_osos(hvt_write: bool = False):
+    wd = DEV["ito_os_hvt"] if hvt_write else DEV["ito_os"]
+    c_sn = (0.12 * tech.C_GATE_PER_UM + 0.10 * tech.C_JUNC_PER_UM + 0.30e-15)
+    return _cell(KIND_OSOS, tech.GC_OSOS_W, tech.GC_OSOS_H,
+                 w_write=0.10, w_read=0.12, c_sn=c_sn,
+                 wd=wd, rd=DEV["igzo_os"], dual=1, leaks=0)
+
+
+BITCELLS = {
+    "sram6t": sram6t(),
+    "gc_sisi": gc_sisi(),
+    "gc_sisi_hvt": gc_sisi(hvt_write=True),
+    "gc_ossi": gc_ossi(),
+    "gc_ossi_hvt": gc_ossi(hvt_write=True),
+    "gc_osos": gc_osos(),
+    "gc_osos_hvt": gc_osos(hvt_write=True),   # + LS: >10 s retention (Fig 9)
+}
+
+MEM_TYPE_ORDER = tuple(BITCELLS)
+MEM_TYPE = {n: i for i, n in enumerate(MEM_TYPE_ORDER)}
+
+
+def stack_bitcells(names=MEM_TYPE_ORDER):
+    cells = [BITCELLS[n] for n in names]
+    return BitcellParams(*[jnp.stack([getattr(c, f) for c in cells])
+                           for f in BitcellParams._fields])
+
+
+def take_bitcell(stacked: BitcellParams, idx):
+    return BitcellParams(*[jnp.take(getattr(stacked, f), idx)
+                           for f in BitcellParams._fields])
+
+
+def sn_high_level(cell: BitcellParams, level_shift):
+    """Stored-'1' voltage on SN: degraded by the write device VT unless the
+    WWL is boosted by a level shifter."""
+    wdev = devices.take_device(DEVICE_STACK, cell.write_dev.astype(jnp.int32))
+    degraded = tech.VDD - wdev.vt
+    is_gc = cell.kind > 0
+    full = jnp.asarray(tech.VDD, jnp.float32)
+    lvl = jnp.where(level_shift > 0, full, degraded)
+    return jnp.where(is_gc, lvl, full)

@@ -1,0 +1,155 @@
+"""Delay / frequency / bandwidth / power characterization of a macro config.
+
+The full pipeline mirrors OpenGCRAM's HSPICE runs with analytic circuit
+models: decoder logical-effort chain -> WL RC -> cell read current
+discharging/charging the RBL -> column mux -> sense amp -> output DFF, with
+the control delay-chain quantization that produces the paper's 1:1-aspect
+frequency cliff. Everything is jnp -> the whole design space characterizes
+under one vmap (and is differentiable for the gradient sizing optimizer).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitcells, devices, macro, periphery, retention, tech
+
+
+def _read_current(cell, ls):
+    """Worst-case sense current: stored-'0' on-current minus the residual
+    false current of a worst-case droopy '1' (smaller margin without LS)."""
+    rdev = devices.take_device(bitcells.DEVICE_STACK,
+                               cell.read_dev.astype(jnp.int32))
+    i0 = devices.mosfet_id(rdev, tech.VDD, 0.5 * tech.VDD, cell.w_read)
+    v1 = bitcells.sn_high_level(cell, ls)
+    i1 = devices.mosfet_id(rdev, tech.VDD - v1, 0.5 * tech.VDD, cell.w_read)
+    return jnp.maximum(i0 - i1, 0.05 * i0)
+
+
+def _write_current(cell, ls):
+    """Write-device current charging the SN to its target level (end-of-write
+    overdrive: WWL - 0.9*target)."""
+    wdev = devices.take_device(bitcells.DEVICE_STACK,
+                               cell.write_dev.astype(jnp.int32))
+    vwwl = jnp.where(ls > 0, tech.VDD_BOOST, tech.VDD)
+    v_t = bitcells.sn_high_level(cell, ls)
+    vgs = vwwl - 0.9 * v_t
+    return devices.mosfet_id(wdev, vgs, jnp.maximum(tech.VDD - 0.9 * v_t, 0.1),
+                             cell.w_write)
+
+
+def _sram_cell_current(cell):
+    adev = devices.take_device(bitcells.DEVICE_STACK,
+                               cell.write_dev.astype(jnp.int32))
+    return 0.8 * devices.i_on(adev, cell.w_write)
+
+
+def characterize(vec):
+    """Full PPA + retention characterization of one config vector.
+
+    Returns a flat dict of jnp scalars (vmap-able)."""
+    g = macro.geometry(vec)
+    cell, rows, cols = g["cell"], g["rows"], g["cols"]
+    ls, m, wz = g["ls"], g["mux"], g["wz"]
+    is_gc = g["is_gc"]
+
+    area, breakdown = macro.macro_area(g)
+
+    # ---------------- read path -------------------------------------------
+    dec_a, t_dec, e_dec, l_dec = periphery.decoder(rows)
+    c_wl, r_wl = periphery.wordline_rc(cols, cell.cell_w, cell.w_read)
+    _, t_wl, e_wl, l_wl = periphery.wl_driver(c_wl, r_wl)
+    c_bl, r_bl = periphery.bitline_rc(rows, cell.cell_h, cell.w_read)
+
+    i_rd_gc = _read_current(cell, ls)
+    t_bl_gc = c_bl * tech.V_SENSE / jnp.maximum(i_rd_gc, 1e-9)
+    i_rd_sram = _sram_cell_current(cell)
+    t_bl_sram = c_bl * tech.V_SENSE_SRAM / jnp.maximum(i_rd_sram, 1e-9)
+    t_bl = jnp.where(is_gc > 0, t_bl_gc, t_bl_sram)
+
+    _, t_mux, e_mux, l_mux = periphery.column_mux(m)
+    sa_a, t_sa, e_sa, l_sa = periphery.sense_amp()
+    sa_a2, t_sa2, e_sa2, l_sa2 = periphery.sense_amp(current_mode=True)
+    t_sa = jnp.where(g["sa_cm"] > 0, t_sa2, t_sa)
+    e_sa = jnp.where(g["sa_cm"] > 0, e_sa2, e_sa)
+
+    t_read = (tech.T_DFF_CQ + t_dec + t_wl + 0.7 * r_bl * c_bl + t_bl
+              + t_mux + t_sa + tech.T_SETUP)
+    t_read_cyc, dc_a, e_dc, l_dc = periphery.delay_chain(t_read)
+
+    # ---------------- write path ------------------------------------------
+    c_wwl, r_wwl = periphery.wordline_rc(cols, cell.cell_w, cell.w_write)
+    _, t_wwl, e_wwl, l_wwl = periphery.wl_driver(c_wwl, r_wwl, boost=True)
+    ls_a, t_ls, e_ls, l_ls = periphery.level_shifter()
+    t_wwl = t_wwl + ls * t_ls * is_gc
+    c_wbl, _ = periphery.bitline_rc(rows, cell.cell_h, cell.w_write)
+    wd_a, t_wd, e_wd, l_wd = periphery.write_driver(c_wbl)
+    i_w = _write_current(cell, ls)
+    t_sn = cell.c_sn * bitcells.sn_high_level(cell, ls) / jnp.maximum(i_w, 1e-9)
+    t_sn = jnp.where(is_gc > 0, t_sn, 30e-12)       # SRAM: driver overpowers
+    t_write = tech.T_DFF_CQ + t_dec + t_wwl + t_wd + t_sn + tech.T_SETUP
+    t_write_cyc, _, _, _ = periphery.delay_chain(t_write)
+
+    # ---------------- frequency / bandwidth --------------------------------
+    f_read = 1.0 / t_read_cyc
+    f_write = 1.0 / t_write_cyc
+    # dual-port GC: concurrent R/W; SRAM: shared port (~30% write traffic)
+    f_sram = 1.0 / jnp.maximum(t_read_cyc, t_write_cyc)
+    f_op = jnp.where(is_gc > 0, jnp.minimum(f_read, f_write), f_sram)
+    # effective READ bandwidth: SRAM's shared port loses ~30% to writes
+    # (Fig 8b: "SRAM bandwidth is higher but reduced by the shared port");
+    # dual-port GC reads are never blocked, and total BW adds the write port.
+    bw_bits = jnp.where(is_gc > 0, wz * f_read, wz * f_sram * 0.7)
+    bw_total_bits = jnp.where(
+        is_gc > 0, wz * (f_read + f_write * g["dual"]), wz * f_sram * 0.7)
+
+    # ---------------- energy / power ---------------------------------------
+    e_bl_rd = c_bl * tech.VDD * tech.V_SENSE * cols / jnp.maximum(m, 1.0)
+    e_read = (e_dec + e_wl + c_wl * tech.VDD ** 2 + e_bl_rd + wz * e_sa
+              + e_mux + 2 * wz * tech.E_DFF)
+    e_write = (e_dec + e_wwl + e_wd * wz + ls * e_ls * rows * 0.0
+               + c_wbl * tech.VDD ** 2 * wz * 0.5 + wz * tech.E_DFF
+               + ls * is_gc * (c_wwl * (tech.VDD_BOOST ** 2 - tech.VDD ** 2)))
+    p_dyn = (e_read + e_write * 0.5) * f_op * tech.ACTIVITY
+
+    # leakage: SRAM array has static VDD->GND paths; GC array has none.
+    adev = devices.take_device(bitcells.DEVICE_STACK,
+                               cell.write_dev.astype(jnp.int32))
+    i_cell_leak = cell.leak_paths * devices.i_off(adev, 0.15)
+    ncells = g["wz"] * g["nw"]
+    p_leak_array = ncells * i_cell_leak * tech.VDD
+    periph_leak = (l_dec * (1 + g["dual"]) + l_wl + l_wwl + wz * (l_sa + l_wd)
+                   + l_mux * cols + l_dc + ls * l_ls * rows * is_gc
+                   + periphery.control()[3]) * g["banks"]
+    p_leak = p_leak_array + periph_leak * tech.VDD
+
+    # ---------------- retention / refresh -----------------------------------
+    t_ret = jnp.where(is_gc > 0, retention.retention_time(cell, ls), 1e12)
+    p_refresh = jnp.where(
+        is_gc > 0,
+        (e_read + e_write) * g["nw"] / jnp.maximum(t_ret, 1e-9), 0.0)
+
+    return {
+        "area_um2": area,
+        "area_array_um2": breakdown["array"],
+        "f_read_hz": jnp.where(is_gc > 0, f_read, f_sram),
+        "f_write_hz": jnp.where(is_gc > 0, f_write, f_sram),
+        "f_op_hz": f_op,
+        "bandwidth_bits_s": bw_bits,
+        "bandwidth_total_bits_s": bw_total_bits,
+        "t_read_s": t_read, "t_write_s": t_write,
+        "e_read_j": e_read, "e_write_j": e_write,
+        "p_dyn_w": p_dyn, "p_leak_w": p_leak, "p_refresh_w": p_refresh,
+        "retention_s": t_ret,
+        "rows": rows, "cols": cols, "mux": m,
+        "bits": ncells,
+    }
+
+
+characterize_batch = jax.jit(jax.vmap(characterize))
+
+
+def characterize_config(cfg: macro.MacroConfig):
+    """Single-config convenience wrapper returning python floats."""
+    out = jax.jit(characterize)(cfg.to_vector())
+    return {k: float(v) for k, v in out.items()}

@@ -1,0 +1,111 @@
+"""Analytic transistor models (EKV-style): smooth, differentiable, vmap-able.
+
+I_D = Ispec * W * [F((vg - vt_eff)/(n*UT)) - F((vg - vt_eff - n*vd)/(n*UT))]
+with F(u) = ln^2(1 + e^(u/2)), vt_eff = vt - eta*vds (DIBL), plus an off-state
+floor (junction leakage for Si, channel floor <1e-18 A/um for OS materials —
+the paper's headline OS property).
+
+The catalog is stored as stacked jnp arrays so a whole design space of
+(device x VT-class) choices can be characterized in one vmap.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import tech
+
+
+class DeviceParams(NamedTuple):
+    vt: jnp.ndarray            # V (magnitude)
+    n: jnp.ndarray             # subthreshold slope factor (SS = n*UT*ln10)
+    ispec: jnp.ndarray         # A/um spec current
+    eta_dibl: jnp.ndarray      # DIBL coefficient (V/V)
+    i_floor: jnp.ndarray       # A/um off-state floor
+    j_gate: jnp.ndarray        # A/um gate leakage at VDD
+    polarity: jnp.ndarray      # +1 NMOS, -1 PMOS
+
+
+def _F(u):
+    # ln^2(1+e^(u/2)) with overflow-safe softplus
+    sp = jnp.where(u > 40.0, u / 2.0, jnp.log1p(jnp.exp(jnp.minimum(u / 2.0, 40.0))))
+    return sp * sp
+
+
+def mosfet_id(dev: DeviceParams, vgs, vds, w_um):
+    """Drain current [A] for gate-source / drain-source voltages (NMOS sign
+    convention; PMOS callers pass magnitudes)."""
+    vgs = jnp.asarray(vgs, jnp.float32)
+    vds = jnp.asarray(vds, jnp.float32)
+    vt_eff = dev.vt - dev.eta_dibl * vds
+    nut = dev.n * tech.UT
+    i_ch = dev.ispec * (_F((vgs - vt_eff) / nut)
+                        - _F((vgs - vt_eff - dev.n * vds) / nut))
+    i_ch = jnp.maximum(i_ch, 0.0)
+    return (i_ch + dev.i_floor * jnp.sign(jnp.maximum(vds, 0.0))) * w_um
+
+
+def i_on(dev: DeviceParams, w_um, vdd=None):
+    v = tech.VDD if vdd is None else vdd
+    return mosfet_id(dev, v, v, w_um)
+
+
+def i_off(dev: DeviceParams, w_um, vds=None):
+    v = tech.VDD if vds is None else vds
+    return mosfet_id(dev, 0.0, v, w_um)
+
+
+def _mk(vt, ss_mv, ion_target, eta, i_floor, j_gate, polarity=1):
+    """Build params calibrated so I_on(VDD,VDD) == ion_target [A/um]."""
+    n = ss_mv * 1e-3 / (tech.UT * jnp.log(10.0))
+    probe = DeviceParams(*[jnp.asarray(v, jnp.float32) for v in
+                           (vt, n, 1.0, eta, 0.0, 0.0, polarity)])
+    scale = mosfet_id(probe, tech.VDD, tech.VDD, 1.0)
+    return DeviceParams(
+        vt=jnp.float32(vt), n=jnp.float32(n),
+        ispec=jnp.float32(ion_target / scale),
+        eta_dibl=jnp.float32(eta), i_floor=jnp.float32(i_floor),
+        j_gate=jnp.float32(j_gate), polarity=jnp.float32(polarity))
+
+
+# --- catalog (per-um currents at VDD=1.1 V) ----------------------------------
+SI_NMOS = _mk(vt=0.45, ss_mv=88.0, ion_target=600e-6, eta=0.08,
+              i_floor=1e-12, j_gate=2e-12)
+SI_NMOS_HVT = _mk(vt=0.62, ss_mv=85.0, ion_target=420e-6, eta=0.06,
+                  i_floor=1e-12, j_gate=2e-12)
+# read-port PMOS uses a thick(er)-oxide flavor (standard for gain cells: the
+# SN sees this gate, so its tunneling current bounds retention)
+SI_PMOS = _mk(vt=0.45, ss_mv=92.0, ion_target=300e-6, eta=0.08,
+              i_floor=1e-12, j_gate=2e-14, polarity=-1)
+# TCAD-calibrated-style ITO (paper Fig 9d): SS ~65 mV/dec, low Ion, ultra-low
+# off floor. Base VT gives ~ms retention; +VT engineering reaches >10 s.
+ITO_OS = _mk(vt=0.47, ss_mv=65.0, ion_target=110e-6, eta=0.02,
+             i_floor=1e-19, j_gate=0.0)
+ITO_OS_HVT = _mk(vt=0.72, ss_mv=65.0, ion_target=70e-6, eta=0.02,
+                 i_floor=1e-19, j_gate=0.0)
+# p-type OS read FET (CNT/ITO-p hybrid cells, Liu et al. EDL'23 = paper [15]):
+# keeps the PMOS-read active-high-RWL sensing scheme uniform for OS-OS cells.
+IGZO_OS = _mk(vt=0.55, ss_mv=70.0, ion_target=30e-6, eta=0.02,
+              i_floor=1e-19, j_gate=0.0, polarity=-1)
+
+CATALOG = {
+    "si_nmos": SI_NMOS,
+    "si_nmos_hvt": SI_NMOS_HVT,
+    "si_pmos": SI_PMOS,
+    "ito_os": ITO_OS,
+    "ito_os_hvt": ITO_OS_HVT,
+    "igzo_os": IGZO_OS,
+}
+
+
+def stack_devices(names):
+    """Stack catalog entries into one DeviceParams of arrays (for jnp.take)."""
+    devs = [CATALOG[n] for n in names]
+    return DeviceParams(*[jnp.stack([getattr(d, f) for d in devs])
+                          for f in DeviceParams._fields])
+
+
+def take_device(stacked: DeviceParams, idx):
+    return DeviceParams(*[jnp.take(getattr(stacked, f), idx)
+                          for f in DeviceParams._fields])

@@ -1,0 +1,107 @@
+"""Transient retention solver: storage-node decay of a stored '1'.
+
+   C_SN * dV/dt = -[ I_sub(write dev, vgs=0, vds=V) + I_gate(read dev, V) ]
+
+integrated with RK4 on a log-spaced grid (1 ns .. 1e7 s, 30 pts/decade) —
+the SPICE transient the paper runs per configuration. Retention time is the
+crossing of V below V0 - RETENTION_DV_FRAC*VDD (read-margin criterion).
+
+The pure-jnp scan here is the oracle for the Pallas kernel in
+``repro.kernels.retention_kernel`` (same grid, same RK4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitcells, devices, tech
+
+T_START, T_END, PTS_PER_DECADE = 1e-9, 1e7, 30
+N_STEPS = int(PTS_PER_DECADE * (jnp.log10(T_END) - jnp.log10(T_START)))  # 480
+
+
+def time_grid():
+    return jnp.logspace(jnp.log10(T_START), jnp.log10(T_END), N_STEPS + 1)
+
+
+def leak_current(cell: bitcells.BitcellParams, v_sn):
+    """Total leakage pulling the stored '1' down [A] (WBL held at 0V worst
+    case: write-device subthreshold + DIBL, plus read-device gate leak)."""
+    wdev = devices.take_device(bitcells.DEVICE_STACK,
+                               cell.write_dev.astype(jnp.int32))
+    rdev = devices.take_device(bitcells.DEVICE_STACK,
+                               cell.read_dev.astype(jnp.int32))
+    i_sub = devices.mosfet_id(wdev, 0.0, v_sn, cell.w_write)
+    i_gate = rdev.j_gate * cell.w_read * (v_sn / tech.VDD)
+    return i_sub + i_gate
+
+
+def decay_curve(cell: bitcells.BitcellParams, v0):
+    """V_SN(t) on the log grid via RK4. Returns (ts, vs)."""
+    ts = time_grid()
+
+    def f(v):
+        return -leak_current(cell, jnp.maximum(v, 0.0)) / jnp.maximum(
+            cell.c_sn, 1e-18)
+
+    def step(v, dt):
+        k1 = f(v)
+        k2 = f(v + 0.5 * dt * k1)
+        k3 = f(v + 0.5 * dt * k2)
+        k4 = f(v + dt * k3)
+        v_new = v + dt / 6.0 * (k1 + 2 * k2 + 2 * k3 + k4)
+        return jnp.clip(v_new, 0.0, 2.0), v_new
+
+    dts = jnp.diff(ts)
+    v_fin, vs = jax.lax.scan(step, jnp.asarray(v0, jnp.float32), dts)
+    return ts, jnp.concatenate([jnp.asarray([v0], jnp.float32), vs])
+
+
+def read_margin_threshold(cell: bitcells.BitcellParams,
+                          false_read_ratio: float = 0.1):
+    """Absolute SN voltage below which a stored '1' starts to conduct the
+    (PMOS, gate=SN) read device at > ratio x the stored-'0' current — i.e.
+    the point where the '1' reads as '0'.
+
+    This absolute criterion is what makes the WWL level shifter *improve*
+    retention (paper Fig 9c): it raises the stored level from VDD-VT to VDD,
+    widening the droop window to the same threshold."""
+    rdev = devices.take_device(bitcells.DEVICE_STACK,
+                               cell.read_dev.astype(jnp.int32))
+    grid = jnp.linspace(0.0, tech.VDD, 256)
+    # |vgs| of the read device when SN sits at v: VDD - v
+    i_read = devices.mosfet_id(rdev, tech.VDD - grid, tech.VDD, cell.w_read)
+    i_on0 = devices.mosfet_id(rdev, tech.VDD, tech.VDD, cell.w_read)
+    ok = i_read <= false_read_ratio * i_on0          # high-enough SN region
+    # lowest v on the grid that is still a safe '1'
+    idx = jnp.argmax(ok)                             # first True
+    return grid[idx]
+
+
+def retention_time(cell: bitcells.BitcellParams, level_shift=0):
+    """Seconds until the stored '1' droops below the read-margin threshold."""
+    v0 = bitcells.sn_high_level(cell, level_shift)
+    ts, vs = decay_curve(cell, v0)
+    v_min = read_margin_threshold(cell)
+    crossed = vs < v_min
+    idx = jnp.argmax(crossed)                       # first crossing (0 if none)
+    any_cross = jnp.any(crossed)
+    # log-linear interpolation between grid points
+    i0 = jnp.maximum(idx - 1, 0)
+    t0, t1 = ts[i0], ts[idx]
+    v_a, v_b = vs[i0], vs[idx]
+    frac = jnp.clip((v_a - v_min) / jnp.maximum(v_a - v_b, 1e-9), 0.0, 1.0)
+    t_cross = jnp.exp(jnp.log(t0) + frac * (jnp.log(t1) - jnp.log(t0)))
+    return jnp.where(any_cross, t_cross, ts[-1])
+
+
+def retention_estimate(cell: bitcells.BitcellParams, level_shift=0):
+    """Closed-form sanity estimate t ~ C*dV/I_leak(V0) (first-order; the
+    transient solve is more accurate because I_sub varies with V)."""
+    v0 = bitcells.sn_high_level(cell, level_shift)
+    dv = jnp.maximum(v0 - read_margin_threshold(cell), 0.0)
+    i0 = leak_current(cell, v0)
+    return cell.c_sn * dv / jnp.maximum(i0, 1e-30)
+
+
+retention_time_batch = jax.jit(jax.vmap(retention_time, in_axes=(0, 0)))

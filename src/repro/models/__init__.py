@@ -1,0 +1,1 @@
+from repro.models.lm import LM, build_plan  # noqa: F401

@@ -1,0 +1,208 @@
+"""Attention: GQA/MQA/MHA with optional qk-norm, rope, sliding-window and
+blocked (flash-style, online-softmax) computation for long sequences, plus a
+KV-cache decode path.
+
+Layouts:
+  q            (B, S, K, G, hd)   K = kv heads, G = q heads per kv head
+  k, v         (B, S, K, hd)
+  weights wq   (d, H, hd)  wk/wv (d, K, hd)  wo (H, hd, d)
+
+On TPU the prefill path is served by ``repro.kernels.flash_attention``; the
+blocked jnp path below is its oracle and the CPU/dry-run implementation
+(see kernels/ops.py for dispatch).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense_init, rmsnorm, rmsnorm_init, split_keys
+from repro.parallel.sharding import hint
+
+_NEG = -0.7 * jnp.finfo(jnp.float32).max
+
+
+def init_attn(key, cfg, dtype):
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), dtype),
+        "wk": dense_init(ks[1], (d, K, hd), dtype),
+        "wv": dense_init(ks[2], (d, K, hd), dtype),
+        "wo": dense_init(ks[3], (H, hd, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd)
+        p["k_norm"] = rmsnorm_init(hd)
+    return p
+
+
+def _qkv(p, x, cfg, positions):
+    """Project + rope. Returns q (B,S,K,G,hd), k/v (B,S,K,hd)."""
+    K, G = cfg.num_kv_heads, cfg.q_per_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    B, S = x.shape[:2]
+    q = q.reshape(B, S, K, G, cfg.head_dim)
+    # keep batch on the data axis (GSPMD may otherwise trade it for head
+    # sharding and replicate activations across "data"); head dims go to
+    # "model" only when divisible.
+    q = hint(q, "D", None, "M", None, None)
+    k = hint(k, "D", None, "M", None)
+    v = hint(v, "D", None, "M", None)
+    return q, k, v
+
+
+def _block_attend(q_blk, pq, k, v, pk, window, chunk, sink=0):
+    """Online-softmax over kv chunks for one query block.
+
+    q_blk (B,c,K,G,hd); k/v (B,S,K,hd); pq (c,), pk (S,). fp32 accumulators.
+    ``sink``: number of leading positions that bypass the sliding window
+    (attention-sink / meta tokens).
+    """
+    B, c, K, G, hd = q_blk.shape
+    hv = v.shape[-1]          # value head dim may differ from qk dim (MLA)
+    S = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    nk = S // chunk
+    ks = jnp.moveaxis(k.reshape(B, nk, chunk, K, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, chunk, K, hv), 1, 0)
+    pks = pk.reshape(nk, chunk)
+
+    def kv_step(carry, xs):
+        m, l, acc = carry
+        k_c, v_c, pk_c = xs
+        s = jnp.einsum("bqkgh,bskh->bkgqs", q_blk, k_c,
+                       preferred_element_type=jnp.float32) * scale
+        s = hint(s, "D", "M", None, None, None)
+        mask = pq[:, None] >= pk_c[None, :]
+        if window is not None:
+            in_win = pq[:, None] - pk_c[None, :] < window
+            if sink:
+                in_win = in_win | (pk_c[None, :] < sink)
+            mask = mask & in_win
+        s = jnp.where(mask, s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p_ = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p_, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p_, v_c.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((B, K, G, c), _NEG, jnp.float32),
+        jnp.zeros((B, K, G, c), jnp.float32),
+        jnp.zeros((B, K, G, c, hv), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(kv_step, init, (ks, vs, pks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,K,G,c,hv)
+    out = out.astype(q_blk.dtype)                         # leave fp32 inside the block
+    return jnp.moveaxis(out, 3, 1).reshape(B, c, K * G, hv)
+
+
+def causal_attention(q, k, v, positions, window=None, chunk=2048, sink=0):
+    """Blocked causal (optionally sliding-window) attention.
+
+    q (B,S,K,G,hd), k/v (B,Skv,K,hd) -> (B,S,H,hd). ``positions`` (S,) are the
+    absolute positions of queries; keys are assumed at positions (Skv,).
+    """
+    B, S, K, G, hd = q.shape
+    Skv = k.shape[1]
+    pk = jnp.arange(Skv)
+    chunk = min(chunk, S)
+    if S % chunk != 0:
+        chunk = S  # single block (smoke-test sizes)
+    nq = S // chunk
+    kv_chunk = chunk if Skv % chunk == 0 else Skv
+    if nq == 1:
+        return _block_attend(q, positions, k, v, pk, window, kv_chunk, sink)
+    qs = jnp.moveaxis(q.reshape(B, nq, chunk, K, G, hd), 1, 0)
+    pqs = positions.reshape(nq, chunk)
+
+    blk = jax.checkpoint(
+        lambda q_blk, pq, k, v: _block_attend(q_blk, pq, k, v, pk, window,
+                                              kv_chunk, sink))
+
+    def q_step(_, xs):
+        q_blk, pq = xs
+        # per-q-block remat: backward recomputes the (c x c) prob tiles instead
+        # of stashing the full S^2 attention matrix (flash-attention-bwd shape)
+        return None, blk(q_blk, pq, k, v)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, pqs))       # (nq,B,chunk,H,hv)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, K * G, outs.shape[-1])
+
+
+def attn_block(p, x, cfg, positions, window=None, sink=0):
+    """Full attention block for train/prefill. Returns (out, (k, v))."""
+    q, k, v = _qkv(p, x, cfg, positions)
+    o = causal_attention(q, k, v, positions, window=window, chunk=cfg.attn_chunk,
+                         sink=sink)
+    o = hint(o, "D", None, "M", None)
+    out = hint(jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"]),
+               "D", None, None)
+    return out, (k, v)
+
+
+def decode_attn_block(p, x, cfg, k_cache, v_cache, pos, window=None):
+    """Single-token decode against a (B, Smax, K, hd) cache.
+
+    ``pos`` (scalar int32): index of the current token. Returns out plus
+    updated caches. Sequence dim of the cache may be sharded ("SP decode").
+    """
+    B = x.shape[0]
+    K, G, hd = cfg.num_kv_heads, cfg.q_per_kv, cfg.head_dim
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k_new, v_new = _qkv(p, x, cfg, positions)          # q (B,1,K,G,hd)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
+    Smax = k_cache.shape[1]
+    idx = jnp.arange(Smax)
+    valid = idx <= pos
+    if window is not None:
+        valid = valid & (pos - idx < window)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[None, None, None, None, :], s, _NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bkgqh", w, v_cache.astype(jnp.float32))
+    o = jnp.moveaxis(o, 3, 1).reshape(B, 1, K * G, hd)
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"])
+    return out, (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# cross attention (musicgen conditioning)
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attn(key, cfg, dtype):
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = split_keys(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, H, hd), dtype),
+        "wk": dense_init(ks[1], (d, H, hd), dtype),
+        "wv": dense_init(ks[2], (d, H, hd), dtype),
+        "wo": dense_init(ks[3], (H, hd, d), dtype),
+    }
+
+
+def cross_attn_block(p, x, cond):
+    """Non-causal attention of x (B,S,d) over cond (B,T,d)."""
+    hd = p["wq"].shape[-1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", cond, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", cond, p["wv"])
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("bshk,bthk->bhst", q, k, preferred_element_type=jnp.float32) * scale
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhst,bthk->bshk", w, v.astype(jnp.float32))
+    return jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"])

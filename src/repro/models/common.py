@@ -1,0 +1,175 @@
+"""Shared model primitives: init, norms, rope, losses.
+
+Everything is functional: params are nested dicts of jnp arrays, modules are
+pure functions ``f(params, x, ...)``. Matmul-bearing weights keep d_model as
+the FIRST dim of 2-D kernels so the sharding rules in ``repro.parallel`` can
+pattern-match on names + ranks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal init with 1/sqrt(fan_in) scaling (fan_in = shape[-2])."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def _var_dot(x):
+    """mean(x^2) with fp32 accumulation via a dot (bf16 x bf16 -> f32).
+
+    Using a dot instead of square(convert(x)) matters: the elementwise fp32
+    convert of the layer input is loop-invariant w.r.t. the layer-scan and
+    XLA hoists it, materializing an fp32 copy of the whole saved residual
+    stack. A dot's output is (...,) — nothing to hoist."""
+    return jnp.einsum("...d,...d->...", x, x,
+                      preferred_element_type=jnp.float32)[..., None] / x.shape[-1]
+
+
+@jax.custom_vjp
+def rmsnorm(x, scale, eps: float = 1e-6):
+    inv = jax.lax.rsqrt(_var_dot(x) + eps).astype(x.dtype)
+    return (x * inv) * (1.0 + scale).astype(x.dtype)
+
+
+def _rmsnorm_fwd(x, scale, eps=1e-6):
+    inv32 = jax.lax.rsqrt(_var_dot(x) + eps)               # (..., 1) fp32
+    inv = inv32.astype(x.dtype)
+    y = (x * inv) * (1.0 + scale).astype(x.dtype)
+    return y, (x, inv32, scale)
+
+
+def _rmsnorm_bwd(res, dy):
+    # Hand-written so no fp32 convert is applied *directly* to the saved
+    # residual x: autodiff's 2·convert(x)·dvar pattern gets hoisted out of the
+    # layer-scan backward by XLA, materializing an fp32 copy of the whole
+    # (L,B,S,d) residual stack. Here x only appears in bf16 products.
+    x, inv32, scale = res
+    d = x.shape[-1]
+    g = (1.0 + scale).astype(x.dtype)
+    dyg = dy * g
+    inv = inv32.astype(x.dtype)
+    dot = jnp.sum((dyg * x).astype(jnp.float32), axis=-1, keepdims=True)
+    coef = (dot * inv32 * inv32 * inv32 / d).astype(x.dtype)   # (..., 1)
+    dx = dyg * inv - x * coef
+    ds = jnp.sum((dy * x * inv).astype(jnp.float32),
+                 axis=tuple(range(x.ndim - 1)))
+    return dx, ds, None
+
+
+rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rmsnorm_init(d):
+    return jnp.zeros((d,), jnp.float32)   # stored as (scale - 1)
+
+
+# ---------------------------------------------------------------------------
+# rope
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D) rotated pairwise; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, d/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (...,S,1,d/2)
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Vocab-parallel-safe CE: one-hot contraction instead of gather so GSPMD
+    keeps the vocab dim sharded (partial-sum + small all-reduce)."""
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    lz = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    vocab = logits.shape[-1]
+    onehot = jax.nn.one_hot(labels, vocab, dtype=lf.dtype)
+    ll = jnp.sum(lf * onehot, axis=-1)
+    nll = lz - ll
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_cross_entropy(h, head, labels, chunk: int = 1024):
+    """CE over vocab-parallel logits, chunked over the sequence so only a
+    (B, chunk, V/tp) logits slab is ever live (the full (B,S,V) fp32 logits +
+    backward transposes otherwise dominate train memory).
+
+    h (B,S,d), head (d,V), labels (B,S). The chunk body is rematerialized in
+    backward (jax.checkpoint)."""
+    from repro.parallel.sharding import hint
+    B, S, d = h.shape
+    n_valid = B * S
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        S = S + pad
+    nc = S // chunk
+    hs = jnp.moveaxis(h.reshape(B, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+
+    def body(tot, xs):
+        hc, lc = xs
+        logits = hint(jnp.einsum("bsd,dv->bsv", hc, head), "D", None, "M")
+        lf = logits.astype(jnp.float32)
+        m = jnp.max(lf, axis=-1, keepdims=True)
+        lz = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+        onehot = jax.nn.one_hot(lc, logits.shape[-1], dtype=lf.dtype)
+        ll = jnp.sum(lf * onehot, axis=-1)
+        valid = (lc >= 0).astype(jnp.float32)
+        return tot + jnp.sum((lz - ll) * valid), None
+
+    tot, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32),
+                          (hs, ls))
+    return tot / n_valid
+
+
+def zloss(logits):
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    lz = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    return jnp.mean(lz * lz)

@@ -1,0 +1,648 @@
+"""Top-level language-model assembly for all 10 assigned architectures.
+
+``LM(cfg)`` exposes:
+    init(key)                          -> params pytree
+    loss(params, batch)                -> (scalar, metrics)  [train]
+    prefill(params, batch)             -> (cache, last_logits)
+    decode(params, cache, batch, pos)  -> (logits, cache)
+    init_cache(B, max_seq)             -> cache pytree (zeros)
+    input_specs(shape)                 -> dict of ShapeDtypeStructs
+
+Layers are stacked per homogeneous *segment* and evaluated with
+``jax.lax.scan`` (+ jax.checkpoint in train mode) so the HLO stays small for
+61–88-layer configs and activation memory is bounded by the remat policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import (chunked_cross_entropy, cross_entropy,
+                                 dense_init, dtype_of, embed_init, rmsnorm,
+                                 rmsnorm_init, split_keys)
+from repro.models.mlp import init_mlp, mlp_block
+from repro.parallel.sharding import hint
+
+REMAT_POLICIES = {
+    "none": None,
+    "dots": "dots_with_no_batch_dims_saveable",
+    "full": "nothing_saveable",
+}
+
+
+def _ckpt(fn, policy: str):
+    if policy == "none":
+        return fn
+    pol = getattr(jax.checkpoint_policies, REMAT_POLICIES[policy])
+    return jax.checkpoint(fn, policy=pol)
+
+
+# ===========================================================================
+# per-layer init / apply
+# ===========================================================================
+
+
+def _init_layer(key, cfg, dtype, *, kind: str):
+    """kind: dense | moe | hymba | mlstm | slstm"""
+    d = cfg.d_model
+    ks = split_keys(key, 6)
+    if kind == "mlstm":
+        return {"ln": rmsnorm_init(d), "core": xlstm_mod.init_mlstm(ks[0], cfg, dtype)}
+    if kind == "slstm":
+        return {"ln": rmsnorm_init(d), "core": xlstm_mod.init_slstm(ks[0], cfg, dtype)}
+    p: Dict[str, Any] = {"ln1": rmsnorm_init(d), "ln2": rmsnorm_init(d)}
+    if cfg.mla:
+        p["attn"] = mla_mod.init_mla(ks[0], cfg, dtype)
+    else:
+        p["attn"] = attn.init_attn(ks[0], cfg, dtype)
+    if kind == "moe":
+        p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, cfg.mlp_type, dtype)
+    if kind == "hymba":
+        p["ssm"] = ssm_mod.init_ssm(ks[2], cfg, dtype)
+        p["mix_a"] = 0.5 * jnp.ones((d,), jnp.float32)
+        p["mix_s"] = 0.5 * jnp.ones((d,), jnp.float32)
+        p["norm_a"] = rmsnorm_init(d)
+        p["norm_s"] = rmsnorm_init(d)
+    if cfg.cross_attn:
+        p["ln_x"] = rmsnorm_init(d)
+        p["cross"] = attn.init_cross_attn(ks[3], cfg, dtype)
+    return p
+
+
+def _mixer(p, x, cfg, positions, *, kind, window, sink, cache=None, pos=None,
+           ssm_state=None):
+    """Attention(+SSM) sub-block. Returns (out, new_cache, new_ssm_state)."""
+    if kind in ("mlstm", "slstm"):
+        raise AssertionError
+    if cache is None:  # train / prefill
+        if cfg.mla:
+            a, kv = mla_mod.mla_block(p["attn"], x, cfg, positions)
+        else:
+            a, kv = attn.attn_block(p["attn"], x, cfg, positions, window=window,
+                                    sink=sink)
+        if kind == "hymba":
+            s, ssm_state = ssm_mod.ssm_block(p["ssm"], x, cfg)
+            a = (rmsnorm(a, p["norm_a"]) * p["mix_a"].astype(a.dtype)
+                 + rmsnorm(s, p["norm_s"]) * p["mix_s"].astype(a.dtype))
+        return a, kv, ssm_state
+    # decode
+    if cfg.mla:
+        a, cache = mla_mod.mla_decode_block(p["attn"], x, cfg, cache[0], cache[1], pos)
+    else:
+        a, cache = attn.decode_attn_block(p["attn"], x, cfg, cache[0], cache[1],
+                                          pos, window=window)
+    if kind == "hymba":
+        s, ssm_state = ssm_mod.ssm_decode_block(p["ssm"], x, cfg, ssm_state[0],
+                                                ssm_state[1])
+        a = (rmsnorm(a, p["norm_a"]) * p["mix_a"].astype(a.dtype)
+             + rmsnorm(s, p["norm_s"]) * p["mix_s"].astype(a.dtype))
+    return a, cache, ssm_state
+
+
+def _layer_apply(p, x, cfg, positions, *, kind, window, sink, cond=None):
+    """Train/prefill layer. Returns (x, cache_entry, aux)."""
+    if kind == "mlstm":
+        h, state = xlstm_mod.mlstm_block(p["core"], rmsnorm(x, p["ln"]), cfg)
+        return x + h, state, None
+    if kind == "slstm":
+        h, state = xlstm_mod.slstm_block(p["core"], rmsnorm(x, p["ln"]), cfg)
+        return x + h, state, None
+    a, kv, ssm_state = _mixer(p, rmsnorm(x, p["ln1"]), cfg, positions, kind=kind,
+                              window=window, sink=sink)
+    x = x + a
+    if cond is not None:
+        x = x + attn.cross_attn_block(p["cross"], rmsnorm(x, p["ln_x"]), cond)
+    aux = None
+    h = rmsnorm(x, p["ln2"])
+    if kind == "moe":
+        m, aux = moe_mod.moe_block(p["moe"], h, cfg)
+    else:
+        m = mlp_block(p["mlp"], h)
+    cache = (kv, ssm_state) if kind == "hymba" else kv
+    out = x + m
+    if os.environ.get("REPRO_SEQ_SHARDED") == "1":
+        # Megatron-SP analog: keep the residual stream sequence-sharded over
+        # "model" between blocks; TP partial-sums lower to reduce-scatter and
+        # the per-layer activation all-gathers disappear (§Perf iteration)
+        out = hint(out, "D", "M", None)
+    return out, cache, aux
+
+
+def _layer_decode(p, x, cfg, cache, pos, *, kind, window, cond=None):
+    """Decode layer. Returns (x, new_cache)."""
+    if kind == "mlstm":
+        h, state = xlstm_mod.mlstm_decode(p["core"], rmsnorm(x, p["ln"]), cfg, cache)
+        return x + h, state
+    if kind == "slstm":
+        h, state = xlstm_mod.slstm_decode(p["core"], rmsnorm(x, p["ln"]), cfg, cache)
+        return x + h, state
+    kv = cache[0] if kind == "hymba" else cache
+    ssm_state = cache[1] if kind == "hymba" else None
+    a, kv, ssm_state = _mixer(p, rmsnorm(x, p["ln1"]), cfg, None, kind=kind,
+                              window=window, sink=0, cache=kv, pos=pos,
+                              ssm_state=ssm_state)
+    x = x + a
+    if cond is not None:
+        x = x + attn.cross_attn_block(p["cross"], rmsnorm(x, p["ln_x"]), cond)
+    h = rmsnorm(x, p["ln2"])
+    if kind == "moe":
+        m, _ = moe_mod.moe_block(p["moe"], h, cfg)
+    else:
+        m = mlp_block(p["mlp"], h)
+    cache = (kv, ssm_state) if kind == "hymba" else kv
+    return x + m, cache
+
+
+# ===========================================================================
+# segment plan
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    name: str
+    kind: str          # dense | moe | hymba | mlstm | slstm
+    layers: tuple      # absolute layer indices
+    window: Any        # None = full attention
+
+
+def build_plan(cfg):
+    L = cfg.num_layers
+    segs = []
+    if cfg.family in ("dense", "vlm", "audio"):
+        segs.append(Segment("blocks", "dense", tuple(range(L)), None))
+    elif cfg.family == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            segs.append(Segment("dense", "dense", tuple(range(nd)), None))
+        segs.append(Segment("moe", "moe", tuple(range(nd, L)), None))
+    elif cfg.family == "hybrid":
+        full = set(cfg.full_attn_every)
+        i = 0
+        si = 0
+        while i < L:
+            if i in full:
+                segs.append(Segment(f"full{i}", "hymba", (i,), None))
+                i += 1
+            else:
+                j = i
+                while j < L and j not in full:
+                    j += 1
+                segs.append(Segment(f"swa{si}", "hymba", tuple(range(i, j)),
+                                    cfg.window))
+                si += 1
+                i = j
+    elif cfg.family == "ssm":
+        sl = set(cfg.slstm_layers)
+        i = 0
+        si = 0
+        while i < L:
+            if i in sl:
+                segs.append(Segment(f"slstm{i}", "slstm", (i,), None))
+                i += 1
+            else:
+                j = i
+                while j < L and j not in sl:
+                    j += 1
+                segs.append(Segment(f"mlstm{si}", "mlstm", tuple(range(i, j)), None))
+                si += 1
+                i = j
+    else:
+        raise ValueError(cfg.family)
+    return segs
+
+
+# ===========================================================================
+# LM
+# ===========================================================================
+
+
+class LM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.plan = build_plan(cfg)
+        self.dtype = dtype_of(cfg)
+
+    # ------------------------------------------------------------------ init
+    def init(self, key):
+        cfg, dtype = self.cfg, self.dtype
+        d = cfg.d_model
+        keys = split_keys(key, len(self.plan) + 6)
+        params: Dict[str, Any] = {}
+        if cfg.audio_codebooks:
+            params["embed"] = embed_init(keys[0], (cfg.audio_codebooks,
+                                                   cfg.vocab_size, d), dtype)
+            params["heads"] = dense_init(keys[1], (cfg.audio_codebooks, d,
+                                                   cfg.vocab_size), dtype)
+        else:
+            params["embed"] = embed_init(keys[0], (cfg.vocab_size, d), dtype)
+            if not cfg.tie_embeddings:
+                params["head"] = dense_init(keys[1], (d, cfg.vocab_size), dtype)
+        if cfg.vision:
+            ks = split_keys(keys[2], 2)
+            params["vis_proj"] = {
+                "w1": dense_init(ks[0], (cfg.vision_dim, d), dtype),
+                "w2": dense_init(ks[1], (d, d), dtype),
+            }
+        if cfg.cross_attn:
+            params["cond_proj"] = dense_init(keys[3], (cfg.cond_dim, d), dtype)
+        if cfg.meta_tokens:
+            params["meta"] = embed_init(keys[4], (cfg.meta_tokens, d), dtype)
+        for seg, k in zip(self.plan, keys[6:]):
+            lk = jax.random.split(k, len(seg.layers))
+            init_one = partial(_init_layer, cfg=cfg, dtype=dtype, kind=seg.kind)
+            params[seg.name] = jax.vmap(init_one)(lk)
+        params["ln_f"] = rmsnorm_init(d)
+        if cfg.mtp:
+            params["mtp"] = {
+                "proj": dense_init(keys[5], (2 * d, d), dtype),
+                "ln_h": rmsnorm_init(d),
+                "ln_e": rmsnorm_init(d),
+                "layer": _init_layer(keys[5], cfg, dtype, kind="moe"),
+                "ln_f": rmsnorm_init(d),
+            }
+        return params
+
+    # -------------------------------------------------------------- embedding
+    def _embed_inputs(self, params, batch):
+        """Returns (x (B,S,d), positions (S,), loss_mask (S-aligned) or None,
+        labels_provider)."""
+        cfg = self.cfg
+        if cfg.audio_codebooks:
+            codes = batch["codes"]                              # (B, nq, S)
+            # per-codebook embedding lookup, summed
+            x = sum(params["embed"][k][codes[:, k]] for k in range(cfg.audio_codebooks))
+            cond = jnp.einsum("btc,cd->btd", batch["cond"].astype(self.dtype),
+                              params["cond_proj"])
+            return hint(x, "D", None, None), None, cond
+        toks = batch["tokens"]
+        x = params["embed"][toks]                               # (B, S_text, d)
+        if cfg.vision:
+            pv = params["vis_proj"]
+            h = jnp.einsum("bpc,cd->bpd", batch["patches"].astype(self.dtype),
+                           pv["w1"])
+            h = jax.nn.gelu(h.astype(jnp.float32)).astype(self.dtype)
+            h = jnp.einsum("bpd,de->bpe", h, pv["w2"])
+            x = jnp.concatenate([h, x], axis=1)
+        if cfg.meta_tokens:
+            B = x.shape[0]
+            meta = jnp.broadcast_to(params["meta"][None], (B, cfg.meta_tokens,
+                                                           x.shape[-1]))
+            x = jnp.concatenate([meta, x], axis=1)
+        return hint(x, "D", None, None), None, None
+
+    def _run_segments(self, params, x, positions, cond, mode, remat="dots"):
+        """mode: 'train' | 'prefill'. Returns (x, caches, aux_list)."""
+        cfg = self.cfg
+        caches: Dict[str, Any] = {}
+        auxes = []
+        for seg in self.plan:
+            sink = cfg.meta_tokens if seg.window is not None else 0
+            body = partial(_layer_apply, cfg=cfg, positions=positions,
+                           kind=seg.kind, window=seg.window, sink=sink, cond=cond)
+
+            def scan_body(h, layer_p, _body=body, _mode=mode):
+                h, cache, aux = _body(layer_p, h)
+                if _mode == "train":
+                    cache = None   # don't stack per-layer KV during training
+                return h, (cache, aux)
+
+            if mode == "train":
+                scan_body = _ckpt(scan_body, remat)
+            if len(seg.layers) == 1:
+                sp = jax.tree.map(lambda a: a[0], params[seg.name])
+                x, (cache, aux) = scan_body(x, sp)
+                cache = jax.tree.map(lambda a: a[None], cache) if cache is not None else None
+                aux = jax.tree.map(lambda a: a[None], aux) if aux is not None else None
+            else:
+                x, (cache, aux) = jax.lax.scan(
+                    lambda h, lp: scan_body(h, lp), x, params[seg.name])
+            caches[seg.name] = cache
+            if aux is not None:
+                auxes.append(aux)
+        return x, caches, auxes
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch, remat="full"):
+        cfg = self.cfg
+        x, _, cond = self._embed_inputs(params, batch)
+        B, S, d = x.shape
+        positions = jnp.arange(S)
+        x, _, auxes = self._run_segments(params, x, positions, cond, "train", remat)
+        x = rmsnorm(x, params["ln_f"])
+
+        metrics: Dict[str, Any] = {}
+        if cfg.audio_codebooks:
+            codes = batch["codes"]                              # (B, nq, S)
+            losses = []
+            for k in range(cfg.audio_codebooks):
+                losses.append(chunked_cross_entropy(x[:, :-1], params["heads"][k],
+                                                    codes[:, k, 1:]))
+            loss = sum(losses) / cfg.audio_codebooks
+        else:
+            prefix = (cfg.num_patches if cfg.vision else 0) + cfg.meta_tokens
+            head = params["embed"].T if cfg.tie_embeddings else params["head"]
+            h = x[:, prefix:, :]
+            loss = chunked_cross_entropy(h[:, :-1], head, batch["tokens"][:, 1:])
+
+        if auxes:
+            load = jnp.concatenate([a["load"] for a in auxes], axis=0)  # (Lmoe,E)
+            metrics["moe_load"] = load
+            metrics["moe_dropped"] = jnp.mean(
+                jnp.concatenate([jnp.atleast_1d(a["dropped"]) for a in auxes]))
+            # switch-style balance penalty (small, optional)
+            loss = loss + 1e-3 * cfg.num_experts * jnp.mean(
+                jnp.sum(load * load, axis=-1))
+
+        if cfg.mtp:
+            loss = loss + 0.3 * self._mtp_loss(params, x, batch, positions)
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def _mtp_loss(self, params, h, batch, positions):
+        """DeepSeek multi-token prediction: one extra layer predicting t+2."""
+        cfg = self.cfg
+        mp = params["mtp"]
+        toks = batch["tokens"]
+        emb_next = params["embed"][toks[:, 1:]]                 # (B,S-1,d)
+        hh = jnp.concatenate([rmsnorm(h[:, :-1], mp["ln_h"]),
+                              rmsnorm(emb_next, mp["ln_e"])], axis=-1)
+        x = jnp.einsum("bse,ed->bsd", hh, mp["proj"])
+        x, _, _ = _layer_apply(mp["layer"], x, cfg, positions[:-1], kind="moe",
+                               window=None, sink=0)
+        x = rmsnorm(x, mp["ln_f"])
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        return chunked_cross_entropy(x[:, :-1], head, toks[:, 2:])  # predict t+2
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, params, batch, max_seq=None):
+        """Run the full prompt; build decode caches. Returns (cache, logits)."""
+        cfg = self.cfg
+        x, _, cond = self._embed_inputs(params, batch)
+        B, S, d = x.shape
+        positions = jnp.arange(S)
+        x, caches, _ = self._run_segments(params, x, positions, cond, "prefill")
+        x = rmsnorm(x, params["ln_f"])
+        if cfg.audio_codebooks:
+            logits = jnp.stack([
+                jnp.einsum("bd,dv->bv", x[:, -1], params["heads"][k])
+                for k in range(cfg.audio_codebooks)], axis=1)
+        else:
+            head = params["embed"].T if cfg.tie_embeddings else params["head"]
+            logits = jnp.einsum("bd,dv->bv", x[:, -1], head)
+        cache = self._layout_cache(caches, S, max_seq or (2 * S))
+        return cache, logits
+
+    def _layout_cache(self, caches, S, max_seq):
+        """Convert prefill per-layer outputs into fixed-size decode caches."""
+        cfg = self.cfg
+        # S is the prefill length *including* any meta/patch prefix
+        out = {"pos": jnp.asarray(S, jnp.int32)}
+        total = max_seq + (cfg.meta_tokens or 0) + (cfg.num_patches if cfg.vision else 0)
+        for seg in self.plan:
+            c = caches[seg.name]
+            if seg.kind in ("mlstm", "slstm"):
+                out[seg.name] = c                               # states pass through
+                continue
+            if seg.kind == "hymba":
+                kv, ssm_state = c
+            else:
+                kv, ssm_state = c, None
+            if cfg.mla:
+                ckv, kr = kv                                    # (Lseg,B,S',r)
+                Ls, B = ckv.shape[0], ckv.shape[1]
+                Sp = ckv.shape[2]
+                ckv_c = jnp.zeros((Ls, B, total, ckv.shape[-1]), ckv.dtype)
+                kr_c = jnp.zeros((Ls, B, total, kr.shape[-1]), kr.dtype)
+                ckv_c = jax.lax.dynamic_update_slice(ckv_c, ckv, (0, 0, 0, 0))
+                kr_c = jax.lax.dynamic_update_slice(kr_c, kr, (0, 0, 0, 0))
+                out[seg.name] = (ckv_c, kr_c)
+            else:
+                k, v = kv                                       # (Lseg,B,S',K,hd)
+                if seg.window is not None:
+                    out[seg.name] = self._ring_from_prefill(k, v, seg)
+                else:
+                    Ls, B, Sp, K, hd = k.shape
+                    kc = jnp.zeros((Ls, B, total, K, hd), k.dtype)
+                    vc = jnp.zeros((Ls, B, total, K, hd), v.dtype)
+                    kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, 0, 0, 0))
+                    vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, 0, 0, 0))
+                    out[seg.name] = (kc, vc)
+            if ssm_state is not None:
+                out[seg.name] = (out[seg.name], ssm_state)
+        return out
+
+    def _ring_from_prefill(self, k, v, seg):
+        """Ring (sliding-window) cache: keep last W positions + meta prefix."""
+        cfg = self.cfg
+        W = cfg.window
+        Ls, B, Sp, K, hd = k.shape
+        meta = cfg.meta_tokens or 0
+        mk, mv = k[:, :, :meta], v[:, :, :meta]                 # meta prefix
+        kt, vt = k[:, :, meta:], v[:, :, meta:]
+        St = Sp - meta
+        if St >= W:
+            tail_k, tail_v = kt[:, :, -W:], vt[:, :, -W:]
+            tail_pos = jnp.arange(St - W, St) + meta
+            slots = jnp.mod(tail_pos - meta, W)
+        else:
+            pad = W - St
+            tail_k = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            tail_v = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            tail_pos = jnp.concatenate([jnp.arange(St) + meta,
+                                        jnp.full((pad,), -1)])
+            slots = jnp.arange(W)
+        ring_k = jnp.zeros_like(tail_k).at[:, :, slots].set(tail_k)
+        ring_v = jnp.zeros_like(tail_v).at[:, :, slots].set(tail_v)
+        Ls = k.shape[0]
+        ring_pos = jnp.broadcast_to(
+            jnp.full((W,), -1, jnp.int32).at[slots].set(tail_pos.astype(jnp.int32)),
+            (Ls, W))
+        return {"meta_k": mk, "meta_v": mv, "ring_k": ring_k, "ring_v": ring_v,
+                "ring_pos": ring_pos}
+
+    # ---------------------------------------------------------------- decode
+    def init_cache(self, B, max_seq):
+        """Zero-initialized decode cache (for dry-run decode cells)."""
+        cfg = self.cfg
+        dtype = self.dtype
+        total = max_seq + (cfg.meta_tokens or 0) + (cfg.num_patches if cfg.vision else 0)
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        di = cfg.d_model * cfg.ssm_expand
+        cache: Dict[str, Any] = {"pos": jnp.asarray(total - 1, jnp.int32)}
+        for seg in self.plan:
+            Ls = len(seg.layers)
+            if seg.kind == "mlstm":
+                dh = 2 * cfg.d_model // cfg.num_heads
+                cache[seg.name] = (
+                    jnp.zeros((Ls, B, cfg.num_heads, dh, dh), jnp.float32),
+                    jnp.zeros((Ls, B, cfg.num_heads, dh), jnp.float32),
+                    jnp.full((Ls, B, cfg.num_heads), -1e30, jnp.float32))
+                continue
+            if seg.kind == "slstm":
+                dh = cfg.d_model // cfg.num_heads
+                z = jnp.zeros((Ls, B, cfg.num_heads, dh), jnp.float32)
+                cache[seg.name] = (z, z, jnp.full((Ls, B, cfg.num_heads), -1e30,
+                                                  jnp.float32), z)
+                continue
+            if cfg.mla:
+                kv = (jnp.zeros((Ls, B, total, cfg.kv_lora_rank), dtype),
+                      jnp.zeros((Ls, B, total, cfg.qk_rope_dim), dtype))
+            elif seg.window is not None:
+                meta = cfg.meta_tokens or 0
+                kv = {"meta_k": jnp.zeros((Ls, B, meta, K, hd), dtype),
+                      "meta_v": jnp.zeros((Ls, B, meta, K, hd), dtype),
+                      "ring_k": jnp.zeros((Ls, B, cfg.window, K, hd), dtype),
+                      "ring_v": jnp.zeros((Ls, B, cfg.window, K, hd), dtype),
+                      "ring_pos": jnp.full((Ls, cfg.window), -1, jnp.int32)}
+            else:
+                kv = (jnp.zeros((Ls, B, total, K, hd), dtype),
+                      jnp.zeros((Ls, B, total, K, hd), dtype))
+            if seg.kind == "hymba":
+                st = (jnp.zeros((Ls, B, di, cfg.ssm_state), jnp.float32),
+                      jnp.zeros((Ls, B, cfg.conv_width - 1, di), dtype))
+                cache[seg.name] = (kv, st)
+            else:
+                cache[seg.name] = kv
+        return cache
+
+    def decode(self, params, cache, batch, pos=None):
+        """One decode step. batch: {'tokens': (B,)} (or codes (B,nq), +cond).
+
+        Returns (logits, new_cache)."""
+        cfg = self.cfg
+        pos = cache["pos"] if pos is None else pos
+        if cfg.audio_codebooks:
+            codes = batch["tokens"]                             # (B, nq)
+            x = sum(params["embed"][k][codes[:, k]]
+                    for k in range(cfg.audio_codebooks))[:, None, :]
+            cond = jnp.einsum("btc,cd->btd", batch["cond"].astype(self.dtype),
+                              params["cond_proj"])
+        else:
+            x = params["embed"][batch["tokens"]][:, None, :]    # (B,1,d)
+            cond = None
+        new_cache: Dict[str, Any] = {"pos": pos + 1}
+        for seg in self.plan:
+            c = cache[seg.name]
+            if seg.kind in ("mlstm", "slstm"):
+                fn = xlstm_mod.mlstm_decode if seg.kind == "mlstm" else xlstm_mod.slstm_decode
+
+                def body(h, lp_c, _fn=fn, _seg=seg):
+                    lp, cc = lp_c
+                    hh, st = _fn(lp["core"], rmsnorm(h, lp["ln"]), cfg, cc)
+                    return h + hh, st
+                x, new_c = jax.lax.scan(body, x, (params[seg.name], c))
+                new_cache[seg.name] = new_c
+                continue
+            if seg.window is not None:
+                x, new_c = self._decode_ring_seg(params[seg.name], x, seg, c, pos,
+                                                 cond)
+            else:
+                def body(h, lp_c, _seg=seg):
+                    lp, cc = lp_c
+                    return _layer_decode(lp, h, cfg, cc, pos, kind=_seg.kind,
+                                         window=None, cond=cond)
+                x, new_c = jax.lax.scan(body, x, (params[seg.name], c))
+            new_cache[seg.name] = new_c
+        x = rmsnorm(x, params["ln_f"])[:, 0]                    # (B,d)
+        if cfg.audio_codebooks:
+            logits = jnp.stack([jnp.einsum("bd,dv->bv", x, params["heads"][k])
+                                for k in range(cfg.audio_codebooks)], axis=1)
+        else:
+            head = params["embed"].T if cfg.tie_embeddings else params["head"]
+            logits = jnp.einsum("bd,dv->bv", x, head)
+        return logits, new_cache
+
+    def _decode_ring_seg(self, seg_params, x, seg, cache, pos, cond):
+        cfg = self.cfg
+
+        def body(h, lp_c):
+            lp, cc = lp_c
+            hh, ncc = _ring_layer_decode(lp, h, cfg, cc, pos, cond)
+            return hh, ncc
+
+        return jax.lax.scan(body, x, (seg_params, cache))
+
+    # --------------------------------------------------------------- specs
+    def input_specs(self, shape):
+        """ShapeDtypeStructs for the batch of a given ShapeConfig."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        f32 = jnp.float32
+        if shape.kind in ("train", "prefill"):
+            if cfg.audio_codebooks:
+                return {"codes": jax.ShapeDtypeStruct((B, cfg.audio_codebooks, S), i32),
+                        "cond": jax.ShapeDtypeStruct((B, cfg.cond_len, cfg.cond_dim), f32)}
+            if cfg.vision:
+                return {"tokens": jax.ShapeDtypeStruct((B, S - cfg.num_patches), i32),
+                        "patches": jax.ShapeDtypeStruct((B, cfg.num_patches,
+                                                         cfg.vision_dim), f32)}
+            if cfg.meta_tokens:
+                return {"tokens": jax.ShapeDtypeStruct((B, S - cfg.meta_tokens), i32)}
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        # decode: one new token against a cache of length S
+        if cfg.audio_codebooks:
+            return {"tokens": jax.ShapeDtypeStruct((B, cfg.audio_codebooks), i32),
+                    "cond": jax.ShapeDtypeStruct((B, cfg.cond_len, cfg.cond_dim), f32)}
+        return {"tokens": jax.ShapeDtypeStruct((B,), i32)}
+
+
+def _ring_layer_decode(p, x, cfg, cache, pos, cond):
+    """Hymba SWA layer decode with ring cache + meta prefix + parallel SSM."""
+    kvc, ssm_state = cache
+    h = rmsnorm(x, p["ln1"])
+    a, kvc = _ring_attend(p["attn"], h, cfg, kvc, pos)
+    s, ssm_state = ssm_mod.ssm_decode_block(p["ssm"], h, cfg, ssm_state[0],
+                                            ssm_state[1])
+    a = (rmsnorm(a, p["norm_a"]) * p["mix_a"].astype(a.dtype)
+         + rmsnorm(s, p["norm_s"]) * p["mix_s"].astype(a.dtype))
+    x = x + a
+    hh = rmsnorm(x, p["ln2"])
+    m = mlp_block(p["mlp"], hh)
+    return x + m, (kvc, ssm_state)
+
+
+def _ring_attend(p, x, cfg, kvc, pos):
+    """Attention over meta prefix + ring window cache."""
+    from repro.models.attention import _qkv
+    B = x.shape[0]
+    K, G, hd = cfg.num_kv_heads, cfg.q_per_kv, cfg.head_dim
+    W = cfg.window
+    meta = cfg.meta_tokens or 0
+    positions = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    q, k_new, v_new = _qkv(p, x, cfg, positions)
+    slot = jnp.mod(pos - meta, W)
+    kvc = dict(kvc)
+    kvc["ring_k"] = jax.lax.dynamic_update_slice(
+        kvc["ring_k"], k_new.astype(kvc["ring_k"].dtype), (0, slot, 0, 0))
+    kvc["ring_v"] = jax.lax.dynamic_update_slice(
+        kvc["ring_v"], v_new.astype(kvc["ring_v"].dtype), (0, slot, 0, 0))
+    kvc["ring_pos"] = jax.lax.dynamic_update_slice(
+        kvc["ring_pos"], jnp.reshape(pos, (1,)).astype(jnp.int32), (slot,))
+    k_all = jnp.concatenate([kvc["meta_k"], kvc["ring_k"]], axis=1)
+    v_all = jnp.concatenate([kvc["meta_v"], kvc["ring_v"]], axis=1)
+    pos_all = jnp.concatenate([jnp.arange(meta), kvc["ring_pos"]])
+    valid = (pos_all >= 0) & (pos_all <= pos) & (
+        (pos - pos_all < W) | (jnp.arange(meta + W) < meta))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k_all,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[None, None, None, None, :], s, -0.7 * jnp.finfo(jnp.float32).max)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bkgqh", w, v_all.astype(jnp.float32))
+    o = jnp.moveaxis(o, 3, 1).reshape(B, 1, K * G, hd)
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"])
+    return out, kvc

@@ -1,0 +1,104 @@
+"""Multi-head Latent Attention (DeepSeek-V3).
+
+Train/prefill expand the KV latent to per-head keys/values and reuse the
+blocked attention. Decode runs in the *absorbed* form (scores and output
+computed against the (kv_lora + rope) latent cache directly) — this is the
+faithful DeepSeek inference scheme and what makes the compressed cache pay
+off: cache per token = kv_lora_rank + qk_rope_dim (576 for V3) instead of
+2 * H * head_dim (32768).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import causal_attention
+from repro.models.common import apply_rope, dense_init, rmsnorm, rmsnorm_init, split_keys
+from repro.parallel.sharding import hint
+
+_NEG = -0.7 * jnp.finfo(jnp.float32).max
+
+
+def init_mla(key, cfg, dtype):
+    d, H = cfg.d_model, cfg.num_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = split_keys(key, 7)
+    return {
+        "w_dq": dense_init(ks[0], (d, rq), dtype),
+        "q_norm": rmsnorm_init(rq),
+        "w_uq": dense_init(ks[1], (rq, H, dn + dr), dtype),
+        "w_dkv": dense_init(ks[2], (d, rkv), dtype),
+        "kv_norm": rmsnorm_init(rkv),
+        "w_kr": dense_init(ks[3], (d, dr), dtype),
+        "w_uk": dense_init(ks[4], (rkv, H, dn), dtype),
+        "w_uv": dense_init(ks[5], (rkv, H, dv), dtype),
+        "wo": dense_init(ks[6], (H, dv, d), dtype),
+    }
+
+
+def _q_proj(p, x, cfg, positions):
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"])
+    q = hint(jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"]), "D", None, "M", None)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _kv_latent(p, x, cfg, positions):
+    ckv = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm"])
+    kr = jnp.einsum("bsd,dk->bsk", x, p["w_kr"])[:, :, None, :]  # (B,S,1,dr)
+    kr = apply_rope(kr, positions, cfg.rope_theta)[:, :, 0, :]
+    return ckv, kr
+
+
+def mla_block(p, x, cfg, positions):
+    """Train/prefill path. Returns (out, (ckv, kr)) — the compressed cache."""
+    B, S, _ = x.shape
+    H, dn, dr, dv = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _q_proj(p, x, cfg, positions)
+    ckv, kr = _kv_latent(p, x, cfg, positions)
+    ckv = hint(ckv, "D", None, None)
+    k_nope = hint(jnp.einsum("bsr,rhk->bshk", ckv, p["w_uk"]), "D", None, "M", None)
+    v = hint(jnp.einsum("bsr,rhv->bshv", ckv, p["w_uv"]), "D", None, "M", None)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)         # (B,S,H,dn+dr)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(kr[:, :, None, :], (B, S, H, dr))],
+                        axis=-1)
+    qg = q[:, :, :, None, :]                               # K=H, G=1
+    o = causal_attention(qg.reshape(B, S, H, 1, dn + dr), k, v, positions,
+                         chunk=cfg.attn_chunk)
+    # note: v dim dv != qk dim is fine — accumulator follows v
+    out = jnp.einsum("bshv,hvd->bsd", o.astype(x.dtype), p["wo"])
+    return out, (ckv, kr)
+
+
+def mla_decode_block(p, x, cfg, ckv_cache, kr_cache, pos):
+    """Absorbed single-token decode against the latent cache.
+
+    ckv_cache (B, Smax, rkv), kr_cache (B, Smax, dr).
+    """
+    B = x.shape[0]
+    H, dn, dr, dv = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    positions = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_rope = _q_proj(p, x, cfg, positions)         # (B,1,H,dn/dr)
+    ckv_new, kr_new = _kv_latent(p, x, cfg, positions)
+    ckv_cache = jax.lax.dynamic_update_slice(
+        ckv_cache, ckv_new.astype(ckv_cache.dtype), (0, pos, 0))
+    kr_cache = jax.lax.dynamic_update_slice(
+        kr_cache, kr_new.astype(kr_cache.dtype), (0, pos, 0))
+    # absorb W_uk into q: q̃ (B,1,H,rkv)
+    q_abs = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["w_uk"])
+    s_nope = jnp.einsum("bqhr,bsr->bhqs", q_abs.astype(jnp.float32),
+                        ckv_cache.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhk,bsk->bhqs", q_rope.astype(jnp.float32),
+                        kr_cache.astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dn + dr, jnp.float32))
+    s = (s_nope + s_rope) * scale
+    idx = jnp.arange(ckv_cache.shape[1])
+    s = jnp.where((idx <= pos)[None, None, None, :], s, _NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", w, ckv_cache.astype(jnp.float32))
+    o = jnp.einsum("bqhr,rhv->bqhv", o_lat.astype(x.dtype), p["w_uv"])
+    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"])
+    return out, (ckv_cache, kr_cache)

@@ -1,0 +1,34 @@
+"""Feed-forward blocks: SwiGLU (llama family) and non-gated GELU (granite,
+musicgen)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+from repro.parallel.sharding import hint
+
+
+def init_mlp(key, d_model, d_ff, mlp_type, dtype):
+    ks = split_keys(key, 3)
+    if mlp_type == "swiglu":
+        return {
+            "wg": dense_init(ks[0], (d_model, d_ff), dtype),
+            "wu": dense_init(ks[1], (d_model, d_ff), dtype),
+            "wd": dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    return {
+        "wi": dense_init(ks[0], (d_model, d_ff), dtype),
+        "wd": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+
+
+def mlp_block(p, x):
+    if "wg" in p:
+        g = hint(jnp.einsum("bsd,df->bsf", x, p["wg"]), "D", None, "M")
+        u = hint(jnp.einsum("bsd,df->bsf", x, p["wu"]), "D", None, "M")
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = hint(jnp.einsum("bsd,df->bsf", x, p["wi"]), "D", None, "M")
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return hint(jnp.einsum("bsf,fd->bsd", h, p["wd"]), "D", None, None)

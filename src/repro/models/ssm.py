@@ -1,0 +1,136 @@
+"""Mamba-style selective SSM mixer (hymba's SSM heads).
+
+Recurrence (per channel c, state dim n):
+    h_t = exp(dt_t * A) ⊙ h_{t-1} + dt_t * x_t * B_t
+    y_t = ⟨h_t, C_t⟩ + D * x_t
+
+Train/prefill use a chunked associative scan (parallel within chunks,
+sequential across) wrapped in jax.checkpoint so the backward pass only keeps
+chunk-boundary states. Decode is the single-step recurrence.
+
+``repro.kernels.ssm_scan`` is the Pallas TPU version of the chunk kernel;
+``ssm_scan_chunked`` below is its oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+from repro.parallel.sharding import hint
+
+DT_RANK = 64
+
+
+def init_ssm(key, cfg, dtype):
+    d = cfg.d_model
+    di = d * cfg.ssm_expand
+    n, cw = cfg.ssm_state, cfg.conv_width
+    ks = split_keys(key, 8)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di), dtype),          # -> (x, z-gate)
+        "conv_w": dense_init(ks[1], (cw, di), dtype, scale=0.5),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "w_dt1": dense_init(ks[2], (di, DT_RANK), dtype),
+        "w_dt2": dense_init(ks[3], (DT_RANK, di), dtype),
+        "b_dt": jnp.full((di,), -4.6, jnp.float32),             # softplus^-1(0.01)
+        "w_B": dense_init(ks[4], (di, n), dtype),
+        "w_C": dense_init(ks[5], (di, n), dtype),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                          (di, n)) + 0.0),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[6], (di, d), dtype),
+    }
+
+
+def _conv1d(x, w, b, state=None):
+    """Causal depthwise conv. x (B,S,di), w (cw,di). Returns (y, new_state).
+
+    ``state`` (B,cw-1,di) carries the last cw-1 inputs for decode."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                      # (B, S+cw-1, di)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(cw))
+    y = y + b.astype(x.dtype)[None, None, :]
+    new_state = xp[:, -(cw - 1):, :]
+    return y, new_state
+
+
+def _ssm_inputs(p, xz, conv_state=None):
+    """xz (B,S,2di) -> (xc, z, dt, Bc, Cc, new_conv_state)."""
+    di = p["w_B"].shape[0]
+    x_in, z = xz[..., :di], xz[..., di:]
+    xc, conv_state = _conv1d(x_in, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(xz.dtype)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dr->bsr", xc, p["w_dt1"]) @ p["w_dt2"]
+        + p["b_dt"].astype(xz.dtype)).astype(jnp.float32)       # (B,S,di)
+    Bc = jnp.einsum("bsd,dn->bsn", xc, p["w_B"]).astype(jnp.float32)
+    Cc = jnp.einsum("bsd,dn->bsn", xc, p["w_C"]).astype(jnp.float32)
+    return xc, z, dt, Bc, Cc, conv_state
+
+
+def ssm_scan_chunked(x, dt, A, Bc, Cc, D, h0, chunk=128):
+    """Oracle + CPU path for the Pallas kernel. All fp32.
+
+    x/dt (B,S,di); Bc/Cc (B,S,n); A (di,n); D (di,); h0 (B,di,n).
+    Returns (y (B,S,di), h_final)."""
+    B, S, di = x.shape
+    n = A.shape[1]
+    chunk = min(chunk, S)
+    if S % chunk != 0:
+        chunk = S
+    nc = S // chunk
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    def chunk_body(h, xs):
+        xch, dtch, Bch, Cch = xs                                 # (B,T,...)
+        a = hint(jnp.exp(dtch[..., None] * A), "D", None, "M", None)
+        b = hint((dtch * xch)[..., None] * Bch[:, :, None, :], "D", None, "M", None)
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h_t = a_cum * h[:, None] + b_cum                         # (B,T,di,n)
+        y = jnp.einsum("btdn,btn->btd", h_t, Cch) + D * xch
+        return h_t[:, -1], y
+
+    xs = tuple(v.reshape(B, nc, chunk, *v.shape[2:]).swapaxes(0, 1)
+               for v in (x, dt, Bc, Cc))
+    h_fin, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, xs)
+    return jnp.moveaxis(ys, 0, 1).reshape(B, S, di), h_fin
+
+
+def ssm_block(p, x, cfg, h0=None, conv_state=None):
+    """Full-sequence SSM mixer. Returns (out, (h_final, conv_state))."""
+    B, S, d = x.shape
+    di = d * cfg.ssm_expand
+    xz = hint(jnp.einsum("bsd,de->bse", x, p["w_in"]), "D", None, "M")
+    xc, z, dt, Bc, Cc, conv_state = _ssm_inputs(p, xz, conv_state)
+    if h0 is None:
+        h0 = jnp.zeros((B, di, cfg.ssm_state), jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    y, h_fin = ssm_scan_chunked(xc.astype(jnp.float32), dt, A, Bc, Cc, p["D"], h0)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, p["w_out"])
+    return out, (h_fin, conv_state)
+
+
+def ssm_decode_block(p, x, cfg, h, conv_state):
+    """Single-token decode. x (B,1,d); h (B,di,n); conv_state (B,cw-1,di)."""
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xc, z, dt, Bc, Cc, conv_state = _ssm_inputs(p, xz, conv_state)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[:, 0, :, None] * A)                          # (B,di,n)
+    b = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * Bc[:, 0, :][:, None, :]
+    h = a * h + b
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0]) + p["D"] * xc[:, 0].astype(jnp.float32)
+    y = y[:, None, :].astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, p["w_out"])
+    return out, (h, conv_state)

@@ -1,0 +1,181 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, most blocks) and
+sLSTM (scalar memory with recurrent gate mixing, at cfg.slstm_layers).
+
+Both are exact sequential recurrences evaluated with a chunk-rematerialized
+lax.scan (outer scan keeps chunk-boundary states for backward, inner steps
+recompute), which bounds train memory: without it the mLSTM matrix state
+(B,H,dh,dh) would be saved for every timestep.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rmsnorm, rmsnorm_init, split_keys
+from repro.parallel.sharding import hint
+
+
+def _chunked_time_scan(cell, carry, xs, chunk):
+    """scan over time with inner-chunk remat. xs leaves are (B,S,...)."""
+    S = jax.tree_util.tree_leaves(xs)[0].shape[1]
+    chunk = min(chunk, S)
+    if S % chunk != 0:
+        chunk = S
+    nc = S // chunk
+
+    def inner(carry, xs_c):
+        # xs_c leaves (chunk, B, ...) -> scan over time
+        return jax.lax.scan(cell, carry, xs_c)
+
+    xs_t = jax.tree.map(lambda v: jnp.moveaxis(
+        v.reshape(v.shape[0], nc, chunk, *v.shape[2:]), 0, 2), xs)
+    # leaves now (nc, chunk, B, ...)
+    carry, ys = jax.lax.scan(jax.checkpoint(inner), carry, xs_t)
+    # ys leaves (nc, chunk, B, ...) -> (B, S, ...)
+    return carry, jax.tree.map(
+        lambda v: jnp.moveaxis(v.reshape(nc * chunk, *v.shape[2:]), 0, 1), ys)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg, dtype):
+    d, H = cfg.d_model, cfg.num_heads
+    di = 2 * d
+    dh = di // H
+    ks = split_keys(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, di), dtype),
+        "w_z": dense_init(ks[1], (d, di), dtype),
+        "wq": dense_init(ks[2], (di, H, dh), dtype),
+        "wk": dense_init(ks[3], (di, H, dh), dtype),
+        "wv": dense_init(ks[4], (di, H, dh), dtype),
+        "w_if": dense_init(ks[5], (di, 2 * H), dtype, scale=0.02),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(jnp.float32),
+        "h_norm": rmsnorm_init(dh),
+        "w_down": dense_init(ks[6], (di, d), dtype),
+    }
+
+
+def _mlstm_cell(carry, xs):
+    C, n, m = carry                                   # (B,H,dh,dh),(B,H,dh),(B,H)
+    q, k, v, it, ft = xs                              # (B,H,dh) x3, (B,H) x2
+    m_new = jnp.maximum(ft + m, it)
+    f_ = jnp.exp(ft + m - m_new)
+    i_ = jnp.exp(it - m_new)
+    C = f_[..., None, None] * C + i_[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n = f_[..., None] * n + i_[..., None] * k
+    num = jnp.einsum("bhij,bhj->bhi", C, q)           # C @ q  (v-index out)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_states(p, x, cfg):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    di = 2 * d
+    dh = di // H
+    up = hint(jnp.einsum("bsd,de->bse", x, p["w_up"]), "D", None, "M")
+    z = hint(jnp.einsum("bsd,de->bse", x, p["w_z"]), "D", None, "M")
+    q = jnp.einsum("bse,ehk->bshk", up, p["wq"]).astype(jnp.float32) / jnp.sqrt(float(dh))
+    k = jnp.einsum("bse,ehk->bshk", up, p["wk"]).astype(jnp.float32) / jnp.sqrt(float(dh))
+    v = jnp.einsum("bse,ehk->bshk", up, p["wv"]).astype(jnp.float32)
+    gates = (jnp.einsum("bse,eg->bsg", up, p["w_if"]).astype(jnp.float32)
+             + p["b_if"][None, None, :])
+    it, ft = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
+    return up, z, q, k, v, it, ft
+
+
+def mlstm_block(p, x, cfg, state=None, chunk=64):
+    """Returns (out, state). state = (C, n, m)."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dh = 2 * d // H
+    up, z, q, k, v, it, ft = mlstm_states(p, x, cfg)
+    if state is None:
+        state = (jnp.zeros((B, H, dh, dh), jnp.float32),
+                 jnp.zeros((B, H, dh), jnp.float32),
+                 jnp.full((B, H), -1e30, jnp.float32))
+    state, hs = _chunked_time_scan(_mlstm_cell, state, (q, k, v, it, ft), chunk)
+    h = rmsnorm(hs, p["h_norm"]).reshape(B, S, 2 * d).astype(x.dtype)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", h, p["w_down"])
+    return out, state
+
+
+def mlstm_decode(p, x, cfg, state):
+    out, state = mlstm_block(p, x, cfg, state, chunk=1)
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg, dtype):
+    d, H = cfg.d_model, cfg.num_heads
+    dh = d // H
+    ks = split_keys(key, 4)
+    dff = int(d * 8 / 3) // 8 * 8
+    return {
+        "w_g": dense_init(ks[0], (d, 4 * d), dtype),          # z,i,f,o pre-acts
+        "r_g": dense_init(ks[1], (H, dh, 4 * dh), dtype, scale=0.02),
+        "b_g": jnp.zeros((4 * d,), jnp.float32),
+        "h_norm": rmsnorm_init(d),
+        # gated FFN that follows each sLSTM cell in the xLSTM block stack
+        "ffn_norm": rmsnorm_init(d),
+        "wg": dense_init(ks[2], (d, dff), dtype),
+        "wu": dense_init(ks[2], (d, dff), dtype),
+        "wd": dense_init(ks[3], (dff, d), dtype),
+    }
+
+
+def _slstm_cell_fn(p, H, dh):
+    def cell(carry, xs):
+        c, n, m, h_prev = carry                       # (B,H,dh) x3... m (B,H)
+        wx = xs                                       # (B, 4d) precomputed Wx+b
+        B = wx.shape[0]
+        rh = jnp.einsum("bhk,hkg->bhg", h_prev.astype(jnp.float32),
+                        p["r_g"].astype(jnp.float32))  # (B,H,4dh)
+        pre = wx.reshape(B, H, 4 * dh) + rh
+        z_, i_, f_, o_ = jnp.split(pre, 4, axis=-1)   # (B,H,dh)
+        z = jnp.tanh(z_)
+        o = jax.nn.sigmoid(o_)
+        logf = jax.nn.log_sigmoid(f_)
+        m_new = jnp.maximum(logf + m[..., None], i_).max(-1)  # (B,H) shared stabilizer
+        fe = jnp.exp(logf + m[..., None] - m_new[..., None])
+        ie = jnp.exp(i_ - m_new[..., None])
+        c = fe * c + ie * z
+        n = fe * n + ie
+        h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (c, n, m_new, h), h
+    return cell
+
+
+def slstm_block(p, x, cfg, state=None, chunk=64):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dh = d // H
+    wx = (jnp.einsum("bsd,dg->bsg", x, p["w_g"]).astype(jnp.float32)
+          + p["b_g"][None, None, :])
+    if state is None:
+        z = jnp.zeros((B, H, dh), jnp.float32)
+        state = (z, z, jnp.full((B, H), -1e30, jnp.float32), z)
+    cell = _slstm_cell_fn(p, H, dh)
+    state, hs = _chunked_time_scan(cell, state, wx, chunk)
+    h = rmsnorm(hs.reshape(B, S, d), p["h_norm"]).astype(x.dtype)
+    # gated FFN
+    y = rmsnorm(h, p["ffn_norm"])
+    g = jnp.einsum("bsd,df->bsf", y, p["wg"])
+    u = jnp.einsum("bsd,df->bsf", y, p["wu"])
+    y = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out = h + jnp.einsum("bsf,fd->bsd", y, p["wd"])
+    return out, state
+
+
+def slstm_decode(p, x, cfg, state):
+    return slstm_block(p, x, cfg, state, chunk=1)

@@ -1,0 +1,266 @@
+"""Sharding rules: map every parameter / cache / batch leaf to a PartitionSpec.
+
+Axes:
+  "data"  — batch + FSDP (ZeRO-style parameter/optimizer sharding)
+  "model" — tensor parallel (heads / d_ff / experts / vocab) and
+            sequence-parallel decode caches (context parallelism)
+  "pod"   — multi-pod extension of the data axis
+
+Rules are keyed by leaf *name*; stacked layer segments add one leading layer
+axis which is handled generically (rank = rule rank + 1 -> prepend None).
+Any axis whose dimension is not divisible by the mesh extent is dropped
+(replicated) — this is what makes one rule table work across all 10 archs
+(e.g. kv heads 1/5/8 stay replicated under 16-way TP, the standard practice).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# rule tables: leaf name -> per-dim axis names (before the stacked-layer dim).
+# "D" = data/FSDP axis, "M" = model/TP axis, None = replicated.
+_PARAM_RULES: Dict[str, Tuple] = {
+    # embeddings / heads
+    "embed": ("M", "D"),          # (V, d) vocab-parallel; audio (nq,V,d) handled by rank pad
+    "head": ("D", "M"),
+    "heads": (None, "D", "M"),
+    "meta": (None, None),
+    # attention
+    "wq": ("D", "M", None),
+    "wk": ("D", "M", None),
+    "wv": ("D", "M", None),
+    "wo": ("M", None, "D"),
+    "q_norm": (None,), "k_norm": (None,),
+    # mlp
+    "wg": ("D", "M"), "wu": ("D", "M"), "wi": ("D", "M"), "wd": ("M", "D"),
+    # moe
+    "router": ("D", None), "bias": (None,),
+    # mla
+    "w_dq": ("D", "M"), "w_uq": ("D", "M", None),
+    "w_dkv": ("D", "M"), "w_kr": ("D", None),
+    "w_uk": ("D", "M", None), "w_uv": ("D", "M", None),
+    # ssm
+    "w_in": ("D", "M"), "conv_w": (None, "M"), "conv_b": ("M",),
+    "w_dt1": ("M", None), "w_dt2": (None, "M"),
+    "w_B": ("M", None), "w_C": ("M", None),
+    "A_log": ("M", None), "D": ("M",), "b_dt": ("M",),
+    "w_out": ("M", "D"),
+    # xlstm
+    "w_up": ("D", "M"), "w_z": ("D", "M"),
+    "w_if": ("M", None), "b_if": (None,),
+    "r_g": (None, "M", None), "w_g": ("D", "M"), "b_g": (None,),
+    "w_down": ("M", "D"),
+    # multimodal
+    "w1": (None, "M"), "w2": ("M", "D"),
+    "cond_proj": (None, "M"),
+    "proj": ("D", "M"),
+    # mixers / norms (1-D handled by fallback too)
+    "mix_a": (None,), "mix_s": (None,),
+}
+
+# MoE expert tensors override the generic mlp names when under a "moe" subtree:
+_MOE_RULES: Dict[str, Tuple] = {
+    "wg": ("M", "D", None),       # (E, d, f): experts -> EP on model axis
+    "wu": ("M", "D", None),
+    "wd": ("M", None, "D"),
+}
+
+
+def _axis(mesh: Mesh, tag):
+    """Map rule tag to mesh axis name(s)."""
+    if tag == "D":
+        return ("pod", "data") if "pod" in mesh.axis_names else "data"
+    if tag == "M":
+        return "model"
+    if tag == "E":      # expert dim: spread over model x data (full EP)
+        return ("model", "data")
+    return None
+
+
+def _extent(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _spec_for(mesh: Mesh, rule: Tuple, shape: Tuple[int, ...]) -> P:
+    if len(shape) == len(rule) + 1:          # stacked layer segment
+        rule = (None,) + rule
+    if len(shape) != len(rule):
+        rule = (None,) * len(shape)
+    out = []
+    for dim, tag in zip(shape, rule):
+        ax = _axis(mesh, tag)
+        if ax is not None and dim % _extent(mesh, ax) == 0 and dim > 0:
+            out.append(ax)
+        elif tag == "E" and dim % mesh.shape["model"] == 0 and dim > 0:
+            out.append("model")           # fewer experts than chips: EP=TP
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_pspec_tree(mesh: Mesh, params_shapes, mode: str = "train") -> Any:
+    """PartitionSpec pytree for a params pytree (of arrays or SDStructs).
+
+    mode="train": FSDP ("D" tags shard over data) + TP.
+    mode="infer": replicate over data, shard over model only — serving has no
+    optimizer state, so ZeRO-style gathering is pure collective waste
+    (§Perf iteration: removes the per-layer weight all-gathers from
+    prefill/decode entirely)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = []
+    for path, leaf in flat:
+        keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        name = keys[-1] if keys else None
+        in_moe = "moe" in keys[:-1] or "shared" in keys[:-1]
+        rule = None
+        if in_moe and name in _MOE_RULES and "shared" not in keys[:-1]:
+            rule = _MOE_RULES[name]
+        elif name in _PARAM_RULES:
+            rule = _PARAM_RULES[name]
+        else:
+            rule = (None,) * len(leaf.shape)
+        if mode == "infer":
+            rule = tuple(None if t == "D" else t for t in rule)
+            if in_moe and name in _MOE_RULES and "shared" not in keys[:-1]:
+                # replicating 100s-of-GB expert tables over "data" would blow
+                # HBM: spread the expert dim over model x data instead
+                rule = ("E",) + rule[1:]
+        specs.append(_spec_for(mesh, rule, tuple(leaf.shape)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_pspec_tree(mesh: Mesh, batch_shapes) -> Any:
+    d = _axis(mesh, "D")
+
+    def one(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) >= 1 and shape[0] % _extent(mesh, d) == 0:
+            spec[0] = d
+        return P(*spec)
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_pspec_tree(mesh: Mesh, cache_shapes, cfg) -> Any:
+    """Decode caches: batch on data; long sequence dims on model
+    (sequence-parallel / context-parallel decode); feature dims on model where
+    divisible."""
+    m = _axis(mesh, "M")
+    d = _axis(mesh, "D")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    specs = []
+    for path, leaf in flat:
+        keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        name = keys[-1] if isinstance(keys[-1], str) else (
+            keys[-2] if len(keys) > 1 and isinstance(keys[-2], str) else None)
+        shape = tuple(leaf.shape)
+        spec = [None] * len(shape)
+        if len(shape) == 0 or leaf.dtype == jax.numpy.int32 and len(shape) <= 2:
+            specs.append(P(*spec))
+            continue
+        # leading dims: (Ls, B, ...) — layer axis replicated, batch on data
+        if len(shape) >= 2 and shape[1] % _extent(mesh, d) == 0:
+            spec[1] = d
+        elif len(shape) >= 1 and shape[0] % _extent(mesh, d) == 0 and len(shape) <= 3:
+            pass  # states like (Ls,B,..) with tiny B: replicate
+        # sequence-parallel: big 3rd dim (cache length) on model
+        if len(shape) >= 3 and shape[2] >= 4096 and shape[2] % _extent(mesh, m) == 0:
+            spec[2] = m
+        elif len(shape) >= 3:
+            # feature dims on model if divisible (ssm di, xlstm dh, latent r)
+            for i in range(2, len(shape)):
+                if shape[i] % _extent(mesh, m) == 0 and shape[i] >= 2 * _extent(mesh, m):
+                    spec[i] = m
+                    break
+        specs.append(P(*spec))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_pspec_tree(mesh: Mesh, params_shapes, opt_shapes) -> Any:
+    """Optimizer-state specs mirror parameter specs (ZeRO via FSDP axis).
+
+    Handles the int8-quantized moment layout {"q": ..., "scale": ...} where
+    the scale drops the last (reduced) axis."""
+    pspecs = param_pspec_tree(mesh, params_shapes)
+    flat_p = {tuple(_key(k) for k in path): spec
+              for path, spec in jax.tree_util.tree_flatten_with_path(
+                  pspecs, is_leaf=lambda x: isinstance(x, P))[0]}
+
+    def build(moment_tree):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(moment_tree)
+        out = []
+        for path, leaf in flat:
+            keys = tuple(_key(k) for k in path)
+            if keys and keys[-1] in ("q", "scale"):
+                base = flat_p.get(keys[:-1], P())
+                if keys[-1] == "scale":
+                    out.append(P(*(list(base) + [None]))
+                               if len(base) < len(leaf.shape) else
+                               P(*(list(base)[:-1] + [None])))
+                else:
+                    out.append(base)
+            else:
+                out.append(flat_p.get(keys, P()))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return {"m": build(opt_shapes["m"]), "v": build(opt_shapes["v"]),
+            "count": P()}
+
+
+def _key(k):
+    return getattr(k, "key", getattr(k, "name", None))
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def maybe_shard(x, spec: P):
+    """with_sharding_constraint if a mesh is active, else identity (so model
+    code can be mesh-agnostic for CPU smoke tests)."""
+    try:
+        from jax._src import mesh as mesh_lib
+        env_mesh = mesh_lib.thread_resources.env.physical_mesh
+        if env_mesh.empty:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(env_mesh, spec))
+    except Exception:
+        return x
+
+
+def hint(x, *tags):
+    """Sharding hint with symbolic tags: "D" (batch/FSDP axes), "M" (model),
+    None. Tags on non-divisible dims are dropped; no-op without an active
+    mesh. This is how model code pins activation shardings (e.g. keeping the
+    batch dim on "data" inside attention) without knowing the mesh."""
+    try:
+        from jax._src import mesh as mesh_lib
+        env_mesh = mesh_lib.thread_resources.env.physical_mesh
+        if env_mesh.empty:
+            return x
+    except Exception:
+        return x
+    if len(tags) != x.ndim:
+        return x
+    spec = []
+    for dim, tag in zip(x.shape, tags):
+        ax = _axis(env_mesh, tag)
+        if ax is not None and dim % _extent(env_mesh, ax) == 0 and dim > 0:
+            spec.append(ax)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(env_mesh, P(*spec)))

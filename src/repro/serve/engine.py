@@ -1,0 +1,75 @@
+"""Serving: prefill/decode step factories + a minimal batched engine.
+
+The step factories are what the dry-run lowers for the ``prefill_*`` /
+``decode_*`` / ``long_*`` cells; the Engine is the runnable CPU-scale
+serving loop used by examples/serve_lm.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import LM
+
+
+def make_prefill_step(cfg, max_seq: Optional[int] = None):
+    lm = LM(cfg)
+
+    def prefill(params, batch):
+        return lm.prefill(params, batch, max_seq=max_seq)
+
+    return lm, prefill
+
+
+def make_decode_step(cfg):
+    lm = LM(cfg)
+
+    def decode(params, cache, batch):
+        logits, cache = lm.decode(params, cache, batch)
+        return logits, cache
+
+    return lm, decode
+
+
+def sample_greedy(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_temperature(key, logits, temperature=0.8):
+    return jax.random.categorical(key, logits.astype(jnp.float32) / temperature,
+                                  axis=-1).astype(jnp.int32)
+
+
+class Engine:
+    """Batched greedy/temperature generation (CPU-scale reference loop)."""
+
+    def __init__(self, cfg, params, max_seq=256):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.lm, prefill = make_prefill_step(cfg, max_seq=max_seq)
+        _, decode = make_decode_step(cfg)
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode)
+
+    def generate(self, batch: Dict[str, Any], steps: int, temperature=None,
+                 seed=0):
+        cache, logits = self._prefill(self.params, batch)
+        key = jax.random.key(seed)
+        outs = []
+        cond = batch.get("cond")
+        for _ in range(steps):
+            if temperature is None:
+                tok = sample_greedy(logits)
+            else:
+                key, sk = jax.random.split(key)
+                tok = sample_temperature(sk, logits, temperature)
+            outs.append(np.asarray(tok))
+            dec_batch = {"tokens": tok}
+            if cond is not None:
+                dec_batch["cond"] = cond
+            logits, cache = self._decode(self.params, cache, dec_batch)
+        return np.stack(outs, axis=1)  # (B, steps[, nq])

@@ -1,0 +1,94 @@
+"""Train-step factory: loss + grad + AdamW + MoE aux-free bias update.
+
+``make_train_step(cfg)`` returns a pure function
+    step(params, opt_state, batch, stepno) -> (params, opt_state, metrics)
+suitable for jit with donated (params, opt_state).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import LM, build_plan
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+MOE_BIAS_LR = 1e-3
+
+
+def update_moe_bias(cfg, params, load):
+    """DeepSeek aux-loss-free balancing: nudge routing bias against load.
+
+    ``load`` (Lmoe, E) stacked over moe segments in plan order."""
+    plan = build_plan(cfg)
+    row = 0
+    params = dict(params)
+    for seg in plan:
+        if seg.kind != "moe":
+            continue
+        Ls = len(seg.layers)
+        seg_load = load[row: row + Ls]
+        row += Ls
+        seg_p = dict(params[seg.name])
+        moe_p = dict(seg_p["moe"])
+        mean = jnp.mean(seg_load, axis=-1, keepdims=True)
+        moe_p["bias"] = moe_p["bias"] + MOE_BIAS_LR * jnp.sign(mean - seg_load)
+        seg_p["moe"] = moe_p
+        params[seg.name] = seg_p
+    return params
+
+
+def make_train_step(cfg, *, base_lr=3e-4, warmup=200, total_steps=10_000,
+                    acfg: AdamWConfig = AdamWConfig(), remat="full",
+                    microbatch: int | None = None):
+    lm = LM(cfg)
+    lr_fn = cosine_schedule(base_lr, warmup, total_steps)
+
+    def loss_fn(params, batch):
+        return lm.loss(params, batch, remat=remat)
+
+    def grads_of(params, batch):
+        if microbatch is None:
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        # gradient accumulation over microbatches via scan
+        B = jax.tree.leaves(batch)[0].shape[0]
+        n = B // microbatch
+        mb = jax.tree.map(
+            lambda x: x.reshape(n, microbatch, *x.shape[1:]), batch)
+
+        def acc(carry, b):
+            (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, b)
+            carry = jax.tree.map(jnp.add, carry, g)
+            return carry, (l, m)
+
+        # zeros_like keeps the parameter sharding on the fp32 accumulator
+        # (a bare jnp.zeros leaves GSPMD free to replicate 100s of GB)
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                             params)
+        gsum, (ls, ms) = jax.lax.scan(acc, zeros, mb)
+        grads = jax.tree.map(lambda g: g / n, gsum)
+        metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), ms)
+        return (jnp.mean(ls), metrics), grads
+
+    def step(params, opt_state, batch, stepno):
+        (loss, metrics), grads = grads_of(params, batch)
+        lr = lr_fn(stepno)
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params, lr, acfg)
+        if "moe_load" in metrics:
+            params = update_moe_bias(cfg, params, metrics["moe_load"])
+            metrics = {**metrics,
+                       "moe_balance": jnp.std(jnp.mean(metrics["moe_load"], 0))}
+            metrics.pop("moe_load")
+        metrics = {**metrics, "grad_norm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    return lm, step
+
+
+def init_train_state(cfg, key, acfg: AdamWConfig = AdamWConfig()):
+    lm = LM(cfg)
+    params = lm.init(key)
+    opt = adamw_init(params, acfg)
+    return params, opt
