@@ -1,0 +1,2 @@
+"""Paper-figure/table reproduction benchmarks (run via ``python -m
+benchmarks.run`` or ``python benchmarks/run.py`` from the repo root)."""

@@ -1,11 +1,13 @@
 """The paper's §5.4 extended to the 10 assigned architectures: dry-run
-records -> GainSight-analog requirements -> heterogeneous memory selection
-for a TPU-v5e-like accelerator's on-chip buffers."""
+records -> GainSight-analog requirements -> one ``repro.api.explore`` call
+selecting heterogeneous memories for a TPU-v5e-like accelerator's on-chip
+buffers."""
 from __future__ import annotations
 
+from repro.api import Compiler, SelectionPolicy
 from repro.configs import ALL_ARCHS
-from repro.core import dse
-from repro.profiler.traffic import arch_requirements, load_dryrun_record
+from repro.profiler.traffic import (arch_task, load_dryrun_record,
+                                    step_time_estimate)
 
 
 PREFER_EXT = ("os-os", "os-si", "si-si", "sram")   # + OS-OS (paper §6)
@@ -16,22 +18,30 @@ def arch_dse_table(shapes=("train_4k", "decode_32k"),
     # extended space: include OS-OS (the paper's Future Work adds it; our
     # compiler already characterizes it) and allow refreshed gain cells for
     # long-lived data (hour-scale weight storage, paper §5.3)
-    configs = dse.design_space(mem_types=("sram6t", "gc_sisi", "gc_ossi",
-                                          "gc_osos", "gc_osos_hvt"))
-    res = dse.evaluate_space(configs)
-    rows = []
+    compiler = Compiler(mem_types=("sram6t", "gc_sisi", "gc_ossi",
+                                   "gc_osos", "gc_osos_hvt"))
+    tasks = []
+    recs = {}
     for arch in ALL_ARCHS:
         for shape in shapes:
             rec = load_dryrun_record(arch, shape, outdir=outdir)
             if rec is None:
                 continue
-            reqs = arch_requirements(arch, shape, rec)
-            l1, _ = dse.select_level(configs, res, reqs["L1"],
-                                     preference=PREFER_EXT, allow_refresh=True)
-            l2, _ = dse.select_level(configs, res, reqs["L2"],
-                                     preference=PREFER_EXT, allow_refresh=True)
-            rows.append({"arch": arch, "shape": shape, "L1": l1, "L2": l2,
-                         "t_step_ms": round(reqs["t_step"] * 1e3, 3)})
+            tasks.append(arch_task(arch, shape, rec))
+            recs[tasks[-1].task_id] = (arch, shape, rec)
+    rows = []
+    if tasks:
+        report = compiler.explore(
+            tasks=tasks,
+            policy=SelectionPolicy(preference=PREFER_EXT, allow_refresh=True),
+            cache="artifacts/dse_cache")
+        labels = report.labels()
+        for t in report.tasks:
+            arch, shape, rec = recs[t.task_id]
+            rows.append({"arch": arch, "shape": shape,
+                         "L1": labels[t.task_id]["L1"],
+                         "L2": labels[t.task_id]["L2"],
+                         "t_step_ms": round(step_time_estimate(rec) * 1e3, 3)})
     n_hetero = sum("+" in r["L2"] or r["L1"] != r["L2"] for r in rows)
     derived = (f"{len(rows)} (arch,shape) cells profiled; {n_hetero} pick "
                f"heterogeneous L1/L2 mixes")

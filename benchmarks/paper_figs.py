@@ -1,4 +1,5 @@
-"""Benchmarks for every paper table/figure (Figs 7-11, Tables 1-2).
+"""Benchmarks for every paper table/figure (Figs 7-11, Tables 1-2), driven
+through the ``repro.api`` façade (Compiler / DesignTable / explore).
 
 Each function returns (rows, derived) where rows are printable dicts and
 `derived` is a one-line summary of the claim being reproduced.
@@ -7,11 +8,12 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import bitcells, dse, gainsight, retention
-from repro.core.characterize import characterize_config
-from repro.core.macro import MacroConfig
+from repro.api import Compiler, DesignTable, MacroConfig, explore
+from repro.core import bitcells, gainsight, retention
 
 KB_SIZES = [(16, 16), (32, 32), (64, 32), (64, 64), (128, 64), (128, 128)]
+
+_COMPILER = Compiler()
 
 
 def fig7_area():
@@ -21,8 +23,8 @@ def fig7_area():
     for wz, nw in KB_SIZES:
         r = {}
         for mt in ("sram6t", "gc_sisi", "gc_ossi"):
-            c = characterize_config(MacroConfig(mem_type=mt, word_size=wz,
-                                                num_words=nw))
+            c = _COMPILER.compile(mem_type=mt, word_size=wz,
+                                  num_words=nw).ppa
             r[f"{mt}_array_um2"] = round(c["area_array_um2"], 1)
             r[f"{mt}_total_um2"] = round(c["area_um2"], 1)
         kb = wz * nw / 1024
@@ -42,9 +44,9 @@ def fig8_speed_power():
     for mt in ("sram6t", "gc_sisi", "gc_ossi"):
         for wz, nw, tag in ((128, 32, "4:1"), (64, 64, "1:1"), (32, 128, "1:4")):
             for ls in ((False, True) if mt != "sram6t" else (False,)):
-                c = characterize_config(MacroConfig(
-                    mem_type=mt, word_size=wz, num_words=nw, mux=1,
-                    level_shift=ls))
+                c = _COMPILER.compile(mem_type=mt, word_size=wz,
+                                      num_words=nw, mux=1,
+                                      level_shift=ls).ppa
                 rows.append({
                     "mem": mt, "org": f"{wz}x{nw}({tag})", "ls": int(ls),
                     "f_op_mhz": round(c["f_op_hz"] / 1e6, 1),
@@ -99,17 +101,14 @@ def fig10_requirements():
 
 def table2_optimal():
     """Table 2: optimal heterogeneous L1/L2 configuration per task."""
-    configs = dse.design_space()
-    res = dse.evaluate_space(configs)
+    report = explore(tasks=gainsight.TASKS, cache="artifacts/dse_cache")
+    labels = report.labels()
     rows = []
-    matches = 0
-    for t in gainsight.TASKS:
-        l1, _ = dse.select_level(configs, res, t.l1)
-        l2, _ = dse.select_level(configs, res, t.l2)
+    for t in report.tasks:
         exp = gainsight.TABLE2_EXPECTED[t.task_id]
-        ok = (l1 == exp["L1"]) and (l2 == exp["L2"])
-        matches += ok
-        rows.append({"task": t.task_id, "L1": l1, "L2": l2, "match": ok})
+        rows.append({"task": t.task_id, **labels[t.task_id],
+                     "match": labels[t.task_id] == exp})
+    matches = report.matches(gainsight.TABLE2_EXPECTED)
     derived = f"Table 2 reproduced {matches}/7 tasks exactly"
     return rows, derived
 
@@ -119,12 +118,12 @@ def fig11_shmoo():
     sizes = [16, 32, 64, 128]
     cfgs = [MacroConfig(mem_type="gc_sisi", word_size=wz, num_words=nw, mux=1)
             for wz in sizes for nw in sizes]
-    res = dse.evaluate_space(cfgs)
+    table = DesignTable.from_configs(cfgs)
     rows = []
     for t in gainsight.TASKS:
         for lvl_name, lvl in (("L1", t.l1), ("L2", t.l2)):
             b = lvl.buckets[0]
-            ok = dse.feasible_mask(res, b.f_hz, b.lifetime_s)
+            ok = table.shmoo(b.f_hz, b.lifetime_s)
             rows.append({"task": t.task_id, "level": lvl_name,
                          "workable": int(ok.sum()), "of": len(cfgs),
                          "grid": "".join("G" if o else "R" for o in ok)})

@@ -1,12 +1,16 @@
 """Benchmark harness: one function per paper table/figure + compiler-throughput
-and roofline summaries. Prints ``name,us_per_call,derived`` CSV."""
+and roofline summaries. Prints ``name,us_per_call,derived`` CSV.
+
+    pip install -e . && python -m benchmarks.run
+"""
 from __future__ import annotations
 
 import sys
 import time
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+if __package__ in (None, ""):                    # `python benchmarks/run.py`
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 
 def _timed(fn, repeats=1):
@@ -27,13 +31,13 @@ def main() -> None:
         print(f"{fn.__name__},{us:.0f},\"{derived}\"")
 
     # compiler throughput: vmap'd characterization of the whole design space
-    from repro.core import dse as dse_mod
+    from repro.api import DesignTable, design_space
 
     def sweep():
-        cfgs = dse_mod.design_space()
-        return dse_mod.evaluate_space(cfgs), len(cfgs)
+        table = DesignTable.from_configs(design_space())
+        return table, len(table)
 
-    (res, n), us = _timed(sweep)
+    (table, n), us = _timed(sweep)
     print(f"characterize_design_space,{us:.0f},\"{n} configs PPA+retention "
           f"({us / max(n,1):.0f} us/config incl. transient solve)\"")
 

@@ -1,47 +1,44 @@
-"""Heterogeneous memory design-space exploration (paper §5.4):
-reproduce Table 2 and run the beyond-paper extras (Pareto front + gradient
-sizing).
+"""Heterogeneous memory design-space exploration (paper §5.4) through the
+``repro.api`` façade: ``explore()`` reproduces Table 2 in one call, then the
+beyond-paper extras run as chainable ``DesignTable`` queries (Pareto front)
+and ``Compiler.gradient_size`` (continuous sizing).
 
-    PYTHONPATH=src python examples/heterogeneous_dse.py
+    pip install -e . && python examples/heterogeneous_dse.py
 """
-import sys
-from pathlib import Path
-
-sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
-
-import numpy as np
-
-from repro.core import dse, gainsight
-from repro.core.macro import MacroConfig
+from repro.api import Compiler, MacroConfig, explore
+from repro.core import gainsight
 
 
 def main():
-    configs = dse.design_space()
-    res = dse.evaluate_space(configs)
-    print(f"characterized {len(configs)} macro configurations\n")
+    report = explore(tasks=gainsight.TASKS, cache="artifacts/dse_cache")
+    table = report.table
+    print(f"characterized {len(table)} macro configurations\n")
 
     print("== Table 2: optimal heterogeneous L1/L2 per task ==")
-    for t in gainsight.TASKS:
-        l1, _ = dse.select_level(configs, res, t.l1)
-        l2, _ = dse.select_level(configs, res, t.l2)
+    labels = report.labels()
+    for t in report.tasks:
+        got = labels[t.task_id]
         exp = gainsight.TABLE2_EXPECTED[t.task_id]
-        tick = "OK " if (l1, l2) == (exp["L1"], exp["L2"]) else "!! "
-        print(f"  {tick}task {t.task_id} {t.name:24s} L1: {l1:14s} L2: {l2}")
+        tick = "OK " if got == exp else "!! "
+        print(f"  {tick}task {t.task_id} {t.name:24s} "
+              f"L1: {got['L1']:14s} L2: {got['L2']}")
 
     print("\n== Pareto front (area, leak+refresh power, delay) ==")
-    pts = np.stack([res["area_um2"],
-                    res["p_leak_w"] + res["p_refresh_w"],
-                    res["t_read_s"]], axis=1)
-    front = dse.pareto_front(pts)
-    print(f"  {front.sum()}/{len(configs)} non-dominated configs; examples:")
-    for i in np.where(front)[0][:5]:
-        c = configs[i]
-        print(f"    {c.mem_type:12s} {c.word_size}x{c.num_words} LS={int(c.level_shift)} "
-              f"area={res['area_um2'][i]:.0f}um2 f={res['f_op_hz'][i]/1e6:.0f}MHz")
+    front = (table
+             .with_column("p_static_w",
+                          table["p_leak_w"] + table["p_refresh_w"])
+             .pareto("area_um2", "p_static_w", "t_read_s"))
+    print(f"  {len(front)}/{len(table)} non-dominated configs; examples:")
+    for i in range(min(5, len(front))):
+        c = front.config(i)
+        print(f"    {c.mem_type:12s} {c.word_size}x{c.num_words} "
+              f"LS={int(c.level_shift)} "
+              f"area={front['area_um2'][i]:.0f}um2 "
+              f"f={front['f_op_hz'][i] / 1e6:.0f}MHz")
 
     print("\n== beyond-paper: gradient-based continuous sizing ==")
-    out = dse.gradient_size_macro(MacroConfig(mem_type="gc_sisi",
-                                              word_size=64, num_words=128))
+    out = Compiler().gradient_size(MacroConfig(mem_type="gc_sisi",
+                                               word_size=64, num_words=128))
     print(f"  w_read {0.15:.2f}->{out['w_read_um']:.2f}um, "
           f"w_write {0.12:.2f}->{out['w_write_um']:.2f}um: "
           f"cell critical path {out['t_cell_before_s']*1e12:.1f}ps -> "

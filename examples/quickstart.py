@@ -1,32 +1,43 @@
-"""Quickstart: generate, characterize and emit artifacts for a GCRAM macro.
+"""Quickstart: the three-pillar compiler API in ~20 lines.
 
-    PYTHONPATH=src python examples/quickstart.py
+1. ``Compiler().compile(cfg) -> Macro`` — characterize one macro (PPA +
+   retention) and emit its design-flow artifacts (.sp/.v/.lib/.lef).
+2. ``DesignTable`` — the characterized config grid as a columnar table with
+   chainable ``feasible``/``pareto``/``best`` queries and npz caching.
+3. ``explore() -> DSEReport`` — the full heterogeneous-memory DSE
+   (paper Table 2) in one call; see examples/heterogeneous_dse.py.
+
+Install the package once (``pip install -e .``), then::
+
+    python examples/quickstart.py
 """
-import sys
-from pathlib import Path
-
-sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
-
-from repro.core import MacroConfig, characterize_config, generate_all
+from repro.api import Compiler
 
 
 def main():
-    cfg = MacroConfig(mem_type="gc_sisi", word_size=32, num_words=64,
-                      level_shift=True)
+    compiler = Compiler()
+    m = compiler.compile(mem_type="gc_sisi", word_size=32, num_words=64,
+                         level_shift=True)
+    cfg = m.config
     print(f"== OpenGCRAM-JAX quickstart: {cfg.mem_type} "
           f"{cfg.word_size}x{cfg.num_words} (WWLLS={cfg.level_shift}) ==")
-    r = characterize_config(cfg)
+    r = m.ppa
     print(f"area       {r['area_um2']:.0f} um^2")
     print(f"f_read     {r['f_read_hz'] / 1e6:.0f} MHz   "
           f"f_write {r['f_write_hz'] / 1e6:.0f} MHz")
     print(f"bandwidth  {r['bandwidth_bits_s'] / 8e9:.2f} GB/s (read) / "
           f"{r['bandwidth_total_bits_s'] / 8e9:.2f} GB/s (dual-port total)")
     print(f"leakage    {r['p_leak_w'] * 1e6:.3f} uW   "
-          f"retention {r['retention_s']:.3e} s")
-    rep = generate_all(cfg, "artifacts/quickstart")
+          f"retention {m.retention_s:.3e} s")
+    rep = m.write_all("artifacts/quickstart")
     print(f"artifacts  -> artifacts/quickstart/  "
           f"DRC {'clean' if rep['drc_clean'] else 'ERRORS'}, "
           f"LVS {'clean' if rep['lvs_clean'] else 'ERRORS'}")
+
+    # pillar 2 in one line: the cheapest macro that runs 1 GHz for >= 1 ms
+    table = compiler.table(cache="artifacts/dse_cache")
+    pick = table.feasible(1.0e9, 1e-3).best("area_um2")
+    print(f"1GHz/1ms   cheapest feasible macro: {pick}")
 
 
 if __name__ == "__main__":

@@ -1,13 +1,9 @@
 """Serving example: batched prefill + decode with KV cache on a reduced
 hymba (hybrid attention+SSM) model — exercises ring/SWA caches and SSM state.
 
-    PYTHONPATH=src python examples/serve_lm.py
+    pip install -e . && python examples/serve_lm.py
 """
-import sys
 import time
-from pathlib import Path
-
-sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
 import numpy as np

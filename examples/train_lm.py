@@ -7,16 +7,12 @@ The backbone is 100M-class once a production-size vocabulary is attached
 driver ships with vocab 8192 (27.3M params) so 300 steps stay tractable on
 one CPU core.
 
-    PYTHONPATH=src python examples/train_lm.py --steps 300
+    pip install -e . && python examples/train_lm.py --steps 300
 Result of the recorded 300-step run (artifacts/train_lm_300.log):
     loss first10=9.41 -> last10=9.07, 6.7 s/step, 0 restarts.
 """
 import argparse
-import sys
 import time
-from pathlib import Path
-
-sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
 import numpy as np

@@ -1,4 +1,8 @@
-"""Quick dev smoke: every arch, reduced config, one loss eval + prefill/decode."""
+"""Quick dev smoke: every arch, reduced config, one loss eval + prefill/decode.
+
+    pip install -e . && python scripts/smoke_models.py [arch ...]
+(or PYTHONPATH=src without installing)
+"""
 import sys
 
 import jax

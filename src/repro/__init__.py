@@ -1,0 +1,32 @@
+"""OpenGCRAM-JAX: a differentiable gain-cell memory compiler + the
+production LM substrate it is explored against.
+
+The public compiler surface lives in :mod:`repro.api` (``Compiler``,
+``DesignTable``, ``explore``) and is lazily re-exported here so that
+``import repro`` stays cheap for subsystems (configs, models, kernels) that
+never touch the compiler.
+"""
+from __future__ import annotations
+
+_API_NAMES = (
+    "Bucket", "LevelReq", "TaskReq", "SelectionPolicy",
+    "MacroConfig", "Macro", "Compiler",
+    "DesignTable", "design_space",
+    "explore", "DSEReport",
+    "gradient_size_macro", "characterize_call_count",
+)
+
+__all__ = list(_API_NAMES) + ["api"]
+
+
+def __getattr__(name):
+    if name in _API_NAMES or name == "api":
+        import importlib
+        api = importlib.import_module("repro.api")
+        globals()["api"] = api
+        return api if name == "api" else getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

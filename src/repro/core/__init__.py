@@ -2,6 +2,9 @@
 # device models, bitcells, macro composition, SPICE-style characterization
 # (delay/power/retention), netlist+layout with DRC/LVS checks, artifact
 # emission, and the heterogeneous-memory design-space exploration engine.
+#
+# The public entry point is the `repro.api` façade (Compiler / DesignTable /
+# explore); the names below are the physics layer plus legacy re-exports.
 from repro.core.macro import MacroConfig  # noqa: F401
 from repro.core.characterize import characterize_batch, characterize_config  # noqa: F401
 from repro.core.retention import retention_time, decay_curve, retention_estimate  # noqa: F401

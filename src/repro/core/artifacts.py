@@ -7,8 +7,8 @@ from __future__ import annotations
 from repro.core import characterize as chz, layout, macro
 
 
-def emit_verilog(cfg: macro.MacroConfig) -> str:
-    res = chz.characterize_config(cfg)
+def emit_verilog(cfg: macro.MacroConfig, res=None) -> str:
+    res = res if res is not None else chz.characterize_config(cfg)
     wz, nw = cfg.word_size, cfg.num_words
     abits = max((nw - 1).bit_length(), 1)
     dual = cfg.mem_type != "sram6t"
@@ -61,8 +61,8 @@ endmodule
 """
 
 
-def emit_lib(cfg: macro.MacroConfig) -> str:
-    res = chz.characterize_config(cfg)
+def emit_lib(cfg: macro.MacroConfig, res=None) -> str:
+    res = res if res is not None else chz.characterize_config(cfg)
     name = f"{cfg.mem_type}_{cfg.word_size}x{cfg.num_words}"
     t_ns = res["t_read_s"] * 1e9
     # simple 3x3 NLDM table scaled from the nominal op point
@@ -134,22 +134,24 @@ END LIBRARY
 """
 
 
-def generate_all(cfg: macro.MacroConfig, outdir):
+def generate_all(cfg: macro.MacroConfig, outdir, res=None):
     """Full compiler flow for one macro: netlist + floorplan + DRC/LVS +
-    verilog/.lib/.lef. Returns a report dict; writes files to outdir."""
+    verilog/.lib/.lef. Returns a report dict; writes files to outdir.
+    ``res`` is an optional precomputed characterization (``Macro.ppa``)."""
     from pathlib import Path
 
     from repro.core import netlist as nl_mod
     outdir = Path(outdir)
     outdir.mkdir(parents=True, exist_ok=True)
     name = f"{cfg.mem_type}_{cfg.word_size}x{cfg.num_words}"
+    res = res if res is not None else chz.characterize_config(cfg)
     nl, spice = nl_mod.build_netlist(cfg)
     fp = layout.build_floorplan(cfg)
     drc = layout.drc_check(fp)
     lvs = layout.lvs_check(cfg, fp, nl)
     (outdir / f"{name}.sp").write_text(spice)
-    (outdir / f"{name}.v").write_text(emit_verilog(cfg))
-    (outdir / f"{name}.lib").write_text(emit_lib(cfg))
+    (outdir / f"{name}.v").write_text(emit_verilog(cfg, res=res))
+    (outdir / f"{name}.lib").write_text(emit_lib(cfg, res=res))
     (outdir / f"{name}.lef").write_text(emit_lef(cfg))
     report = {
         "name": name,
@@ -157,7 +159,7 @@ def generate_all(cfg: macro.MacroConfig, outdir):
         "lvs_errors": lvs,
         "drc_clean": not drc,
         "lvs_clean": not lvs,
-        "characterization": chz.characterize_config(cfg),
+        "characterization": res,
     }
     import json
     (outdir / f"{name}.report.json").write_text(

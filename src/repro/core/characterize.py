@@ -107,7 +107,11 @@ def characterize(vec):
     e_bl_rd = c_bl * tech.VDD * tech.V_SENSE * cols / jnp.maximum(m, 1.0)
     e_read = (e_dec + e_wl + c_wl * tech.VDD ** 2 + e_bl_rd + wz * e_sa
               + e_mux + 2 * wz * tech.E_DFF)
-    e_write = (e_dec + e_wwl + e_wd * wz + ls * e_ls * rows * 0.0
+    # one write asserts a single WWL, so exactly one row's level shifter
+    # switches per access (a previous revision multiplied by `rows` and then
+    # zeroed the whole term out; the boost-rail recharge is the separate
+    # c_wwl term below)
+    e_write = (e_dec + e_wwl + e_wd * wz + ls * e_ls * is_gc
                + c_wbl * tech.VDD ** 2 * wz * 0.5 + wz * tech.E_DFF
                + ls * is_gc * (c_wwl * (tech.VDD_BOOST ** 2 - tech.VDD ** 2)))
     p_dyn = (e_read + e_write * 0.5) * f_op * tech.ACTIVITY

@@ -1,35 +1,35 @@
-"""Design-space exploration (paper §5.4).
+"""DEPRECATED free-function DSE interface (paper §5.4).
 
-Pipeline: enumerate the config grid -> vmap-characterize -> per-task
-feasibility (read frequency + data lifetime vs retention) -> technology
-selection under the paper's policy ("higher-speed and higher-retention types
-cover lower ones; prefer power/density: OS-Si ≻ Si-Si ≻ SRAM when speed
-permits") -> heterogeneous composition per lifetime/frequency bucket
-(Table 2) and per-config shmoo maps (Fig 11). Plus: Pareto front and a
-beyond-paper gradient-based sizing optimizer (the differentiable models make
-the whole compiler jax.grad-able).
+The design-space exploration pipeline now lives behind the compiler façade:
+
+    from repro.api import Compiler, DesignTable, explore
+
+    report = explore()                      # grid -> Table 2 in one call
+    table = DesignTable.build(cache=...)    # cached characterization
+    macro = Compiler().compile(cfg)         # one macro, PPA + artifacts
+
+Every name below is a thin shim kept so existing call sites (and the seed
+tests) keep working; each emits a DeprecationWarning pointing at its
+replacement. New code should import from :mod:`repro.api`.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+import warnings
+from typing import Dict, List, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bitcells, characterize as chz, macro
+from repro.core import macro
+# re-exported data model (canonical home: repro.core.select / repro.api)
+from repro.core.select import (  # noqa: F401
+    DISPLAY, PREFERENCE, TECH_FAMILIES, Bucket, LevelReq, SelectionPolicy,
+    family_of,
+)
 
-TECH_FAMILIES = {
-    "sram": ("sram6t",),
-    "si-si": ("gc_sisi", "gc_sisi_hvt"),
-    "os-si": ("gc_ossi", "gc_ossi_hvt"),
-    "os-os": ("gc_osos", "gc_osos_hvt"),
-}
-# paper's preference order when multiple technologies satisfy the constraints
-PREFERENCE = ("os-si", "si-si", "sram")
-DISPLAY = {"os-si": "OS-Si GCRAM", "si-si": "Si-Si GCRAM", "sram": "SRAM",
-           "os-os": "OS-OS GCRAM"}
+
+def _deprecated(old: str, new: str):
+    warnings.warn(f"repro.core.dse.{old} is deprecated; use repro.api.{new}",
+                  DeprecationWarning, stacklevel=3)
 
 
 def design_space(mem_types: Sequence[str] = ("sram6t", "gc_sisi", "gc_ossi"),
@@ -37,176 +37,74 @@ def design_space(mem_types: Sequence[str] = ("sram6t", "gc_sisi", "gc_ossi"),
                  num_words=(16, 32, 64, 128, 256, 512),
                  ls_options=(False, True),
                  banks=(1,)) -> List[macro.MacroConfig]:
-    out = []
-    for mt in mem_types:
-        for wz in word_sizes:
-            for nw in num_words:
-                for b in banks:
-                    for ls in (ls_options if mt != "sram6t" else (False,)):
-                        out.append(macro.MacroConfig(
-                            mem_type=mt, word_size=wz, num_words=nw,
-                            banks=b, level_shift=ls))
-    return out
+    _deprecated("design_space", "design_space")
+    from repro import api
+    return api.design_space(mem_types=mem_types, word_sizes=word_sizes,
+                            num_words=num_words, ls_options=ls_options,
+                            banks=banks)
 
 
 def evaluate_space(configs: Sequence[macro.MacroConfig]) -> Dict[str, np.ndarray]:
-    vecs = jnp.stack([c.to_vector() for c in configs])
-    out = chz.characterize_batch(vecs)
-    return {k: np.asarray(v) for k, v in out.items()}
-
-
-# ---------------------------------------------------------------------------
-# task requirements
-# ---------------------------------------------------------------------------
-
-
-@dataclass(frozen=True)
-class Bucket:
-    """One capacity fraction of a cache level: required read frequency [Hz]
-    and maximum data lifetime [s] of the lines mapped to it."""
-    frac: float
-    f_hz: float
-    lifetime_s: float
-
-
-@dataclass(frozen=True)
-class LevelReq:
-    name: str                 # "L1" | "L2"
-    capacity_bits: int
-    buckets: Tuple[Bucket, ...]
+    _deprecated("evaluate_space", "DesignTable.from_configs")
+    from repro import api
+    return api.DesignTable.from_configs(configs).metrics
 
 
 def feasible_mask(res: Dict[str, np.ndarray], f_hz: float, lifetime_s: float,
                   allow_refresh: bool = False) -> np.ndarray:
-    # a cache level must sustain the read stream AND the fills: gate on the
-    # operating frequency (min of read/write cycle) — the OS write transistor
-    # is what caps OS-Si/OS-OS macros (paper Fig 8a)
-    ok_f = res["f_op_hz"] >= f_hz
-    ok_ret = res["retention_s"] >= lifetime_s
-    if allow_refresh:
-        # refresh is viable when it costs <10% of the macro's dynamic power
-        ok_ret = ok_ret | (res["p_refresh_w"] < 0.1 * np.maximum(
-            res["p_dyn_w"], 1e-12))
-    return ok_f & ok_ret
+    _deprecated("feasible_mask", "DesignTable.feasible / select.feasible_mask")
+    from repro.core import select
+    return select.feasible_mask(res, f_hz, lifetime_s,
+                                allow_refresh=allow_refresh)
 
 
 def tech_of(config: macro.MacroConfig) -> str:
-    for fam, members in TECH_FAMILIES.items():
-        if config.mem_type in members:
-            return fam
-    raise KeyError(config.mem_type)
+    _deprecated("tech_of", "family_of")
+    return family_of(config.mem_type)
 
 
 def select_bucket(configs, res, bucket: Bucket, preference=PREFERENCE,
                   allow_refresh=False):
-    """Paper policy: among feasible configs, prefer OS-Si, then Si-Si, then
-    SRAM; within a family pick lowest (leak+refresh) power, then area.
-
-    ``allow_refresh`` extends feasibility to refreshed gain cells (used by the
-    TPU-analog profiler for hour-lived weight storage, matching the paper's
-    'weight storage in AI inference' use case)."""
-    mask = feasible_mask(res, bucket.f_hz, bucket.lifetime_s,
-                         allow_refresh=allow_refresh)
-    fams = np.array([tech_of(c) for c in configs])
-    for fam in preference:
-        idx = np.where(mask & (fams == fam))[0]
-        if idx.size:
-            cost = (res["p_leak_w"][idx] + res["p_refresh_w"][idx],
-                    res["area_um2"][idx])
-            order = np.lexsort((cost[1], cost[0]))
-            return fam, int(idx[order[0]])
-    return None, -1
+    _deprecated("select_bucket", "explore")
+    from repro.core import select
+    fams = np.array([family_of(c.mem_type) for c in configs])
+    policy = SelectionPolicy(preference=tuple(preference),
+                             allow_refresh=allow_refresh)
+    return select.select_bucket_idx(res, fams, bucket, policy)
 
 
 def select_level(configs, res, level: LevelReq, preference=PREFERENCE,
                  allow_refresh=False):
-    """Heterogeneous composition: one technology per bucket (Table 2)."""
-    picks = []
-    for b in level.buckets:
-        fam, idx = select_bucket(configs, res, b, preference, allow_refresh)
-        picks.append({"bucket": b, "family": fam, "config_idx": idx})
-    fams = []
-    for p in picks:
-        if p["family"] and p["family"] not in fams:
-            fams.append(p["family"])
-    label = " + ".join(DISPLAY[f] for f in fams) if fams else "infeasible"
-    return label, picks
+    """Heterogeneous composition, legacy return shape:
+    ``(label, [{"bucket", "family", "config_idx"}, ...])``."""
+    _deprecated("select_level", "explore")
+    from repro.core import select
+    fams = np.array([family_of(c.mem_type) for c in configs])
+    policy = SelectionPolicy(preference=tuple(preference),
+                             allow_refresh=allow_refresh)
+    sel = select.select_level(res, fams, level, policy)
+    picks = [{"bucket": p.bucket, "family": p.family,
+              "config_idx": p.config_idx} for p in sel.picks]
+    return sel.label, picks
 
 
 def shmoo(configs, res, f_req_hz: float, lifetime_s: float) -> np.ndarray:
     """Fig 11: boolean feasibility per config (green/red)."""
-    return feasible_mask(res, f_req_hz, lifetime_s)
-
-
-# ---------------------------------------------------------------------------
-# Pareto + gradient sizing (beyond paper)
-# ---------------------------------------------------------------------------
+    _deprecated("shmoo", "DesignTable.shmoo / DSEReport.shmoo")
+    from repro.core import select
+    return select.feasible_mask(res, f_req_hz, lifetime_s)
 
 
 def pareto_front(points: np.ndarray) -> np.ndarray:
     """Non-dominated mask for rows of (lower-is-better) objectives."""
-    n = points.shape[0]
-    dominated = np.zeros(n, bool)
-    for i in range(n):
-        if dominated[i]:
-            continue
-        dom = np.all(points <= points[i], axis=1) & np.any(
-            points < points[i], axis=1)
-        if np.any(dom):
-            dominated[i] = True
-    return ~dominated
+    _deprecated("pareto_front", "DesignTable.pareto")
+    from repro.core import select
+    return select.pareto_mask(points)
 
 
 def gradient_size_macro(cfg: macro.MacroConfig, steps: int = 200,
                         lr: float = 0.03, area_weight: float = 0.2):
-    """Beyond-paper: continuous sizing via jax.grad on the differentiable
-    delay model. Optimizes (log) read-device and write-device widths of the
-    bitcell to minimize  t_read * (1 + w*area_overhead).
-
-    OpenGCRAM explores discrete configs only; a differentiable compiler can
-    descend the continuous sizing space directly."""
-    base_cell = bitcells.BITCELLS[cfg.mem_type]
-    vec = cfg.to_vector()
-
-    from repro.core import periphery, tech
-
-    def objective(logw):
-        w_read, w_write = jnp.exp(logw)
-        # rebuild the geometry with resized devices
-        cell = base_cell._replace(
-            w_read=w_read, w_write=w_write,
-            c_sn=base_cell.c_sn + (w_read - base_cell.w_read) * 1e-15,
-            cell_w=base_cell.cell_w * (1 + 0.6 * (w_read - base_cell.w_read
-                                                  + w_write - base_cell.w_write)))
-        g = macro.geometry(vec)
-        g = {**g, "cell": cell}
-        area, _ = macro.macro_area(g)
-        i_rd = chz._read_current(cell, g["ls"])
-        c_bl, r_bl = periphery.bitline_rc(g["rows"], cell.cell_h, cell.w_read)
-        t_bl = c_bl * tech.V_SENSE / jnp.maximum(i_rd, 1e-9)
-        i_w = chz._write_current(cell, g["ls"])
-        t_sn = cell.c_sn * bitcells.sn_high_level(cell, g["ls"]) / jnp.maximum(i_w, 1e-9)
-        t = t_bl + t_sn + 0.7 * r_bl * c_bl
-        area0, _ = macro.macro_area(macro.geometry(vec))
-        # log-space objective: well-scaled gradients regardless of absolute ps
-        return jnp.log(t) + area_weight * (area / area0 - 1.0), (t, area)
-
-    logw = jnp.log(jnp.asarray([float(base_cell.w_read),
-                                float(base_cell.w_write)]))
-    grad_fn = jax.jit(jax.grad(lambda lw: objective(lw)[0]))
-    val_fn = jax.jit(lambda lw: objective(lw)[1])
-    hist = []
-    for i in range(steps):
-        g_ = grad_fn(logw)
-        logw = logw - lr * g_
-        logw = jnp.clip(logw, jnp.log(0.06), jnp.log(0.60))
-    t0, a0 = val_fn(jnp.log(jnp.asarray([float(base_cell.w_read),
-                                         float(base_cell.w_write)])))
-    t1, a1 = val_fn(logw)
-    return {
-        "w_read_um": float(jnp.exp(logw)[0]),
-        "w_write_um": float(jnp.exp(logw)[1]),
-        "t_cell_before_s": float(t0), "t_cell_after_s": float(t1),
-        "area_before_um2": float(a0), "area_after_um2": float(a1),
-        "speedup": float(t0 / t1),
-    }
+    _deprecated("gradient_size_macro", "gradient_size_macro")
+    from repro import api
+    return api.gradient_size_macro(cfg, steps=steps, lr=lr,
+                                   area_weight=area_weight)

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.core.dse import Bucket, LevelReq
+from repro.core.select import Bucket, LevelReq
 
 KB = 8 * 1024
 

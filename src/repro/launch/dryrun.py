@@ -321,6 +321,32 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: Path,
     return rec
 
 
+def memory_dse_annotate(cells, outdir: Path):
+    """One ``repro.api.explore`` call over every successful cell: derive the
+    GainSight-analog L1/L2 requirements from each dry-run record and stamp
+    the selected heterogeneous memory mix back into its JSON."""
+    from repro.api import SelectionPolicy, explore
+    from repro.profiler.traffic import arch_task
+
+    tasks, paths = [], {}
+    for rec, out_path in cells:
+        if rec.get("status") != "ok":
+            continue
+        t = arch_task(rec["arch"], rec["shape"], rec)
+        tasks.append(t)
+        paths[t.task_id] = (rec, out_path)
+    if not tasks:
+        return
+    report = explore(tasks=tasks,
+                     policy=SelectionPolicy(allow_refresh=True),
+                     cache=outdir / "dse_cache")
+    for tid, levels in report.labels().items():
+        rec, out_path = paths[tid]
+        rec["memory_dse"] = levels
+        out_path.write_text(json.dumps(rec, indent=2))
+        print(f"[dryrun] DSE {tid}: L1={levels['L1']} L2={levels['L2']}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -331,6 +357,9 @@ def main():
     ap.add_argument("--save-hlo", action="store_true")
     ap.add_argument("--opt", type=int, default=0,
                     help="0=baseline sharding, >=1 perf-optimized")
+    ap.add_argument("--dse", action="store_true",
+                    help="annotate each compiled cell with its heterogeneous "
+                         "L1/L2 memory pick (repro.api.explore)")
     ap.add_argument("--out", default="artifacts/dryrun")
     args = ap.parse_args()
     if args.opt >= 2:
@@ -351,16 +380,19 @@ def main():
         cells.append((args.arch, args.shape))
 
     failures = 0
+    done = []
     for arch, shape in cells:
         mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
         out_path = outdir / f"{arch}__{shape}__{mesh_name}.json"
         if args.skip_existing and out_path.exists():
-            st = json.loads(out_path.read_text()).get("status")
-            if st in ("ok", "skipped"):
+            rec = json.loads(out_path.read_text())
+            if rec.get("status") in ("ok", "skipped"):
+                done.append((rec, out_path))
                 continue
         try:
-            run_cell(arch, shape, args.multi_pod, outdir,
-                     save_hlo=args.save_hlo, opt_level=args.opt)
+            rec = run_cell(arch, shape, args.multi_pod, outdir,
+                           save_hlo=args.save_hlo, opt_level=args.opt)
+            done.append((rec, out_path))
         except Exception as e:  # record failure, keep sweeping
             failures += 1
             rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
@@ -368,6 +400,8 @@ def main():
                    "traceback": traceback.format_exc()[-4000:]}
             out_path.write_text(json.dumps(rec, indent=2))
             print(f"[dryrun] FAIL {arch} {shape} ({mesh_name}): {e!r}")
+    if args.dse:
+        memory_dse_annotate(done, outdir)
     raise SystemExit(1 if failures else 0)
 
 

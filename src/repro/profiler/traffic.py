@@ -21,7 +21,7 @@ from pathlib import Path
 from typing import Dict, Optional
 
 from repro.configs import SHAPES, get_config
-from repro.core.dse import Bucket, LevelReq
+from repro.core.select import Bucket, LevelReq, TaskReq
 
 # TPU-v5e-like hardware constants (same as the roofline)
 PEAK_FLOPS = 197e12
@@ -92,3 +92,12 @@ def arch_requirements(arch: str, shape_name: str,
         l2_buckets.append(Bucket(0.20, f_l2, act_lifetime))
     l2 = LevelReq("L2", L2_ANALOG_BITS, tuple(l2_buckets))
     return {"L1": l1, "L2": l2, "t_step": t_step}
+
+
+def arch_task(arch: str, shape_name: str,
+              rec: Optional[dict] = None) -> TaskReq:
+    """One (arch x shape) cell as a TaskReq for ``repro.api.explore``."""
+    reqs = arch_requirements(arch, shape_name, rec)
+    return TaskReq(task_id=f"{arch}/{shape_name}",
+                   name=f"{arch} {shape_name}",
+                   levels={"L1": reqs["L1"], "L2": reqs["L2"]})

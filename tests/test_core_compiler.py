@@ -3,7 +3,9 @@ artifacts — unit + hypothesis property tests."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# hypothesis is a dev extra: property tests skip where absent, unit tests run
+from _hypothesis_compat import given, settings, st
 
 from repro.core import bitcells, devices, dse, gainsight, retention, tech
 from repro.core.artifacts import emit_lef, emit_lib, emit_verilog, generate_all

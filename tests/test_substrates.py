@@ -7,7 +7,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# hypothesis is a dev extra: property tests skip where absent, unit tests run
+from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint.ckpt import Checkpointer
 from repro.configs import get_config, reduce_config
