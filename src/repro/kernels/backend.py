@@ -1,0 +1,83 @@
+"""Kernel backend dispatch: one registry instead of per-call mode strings.
+
+Every compute hot-spot registers up to three implementations:
+
+  "tpu"       — native ``pallas_call`` (requires a TPU device)
+  "interpret" — the same Pallas kernel through the interpreter (any device;
+                what the test suite exercises)
+  "xla"       — the pure jax.numpy oracle from ``kernels/ref.py``
+
+Selection order (``resolve_backend``):
+
+  1. explicit ``backend=`` argument
+  2. ``REPRO_KERNEL_BACKEND`` env var ("tpu" / "interpret" / "xla")
+  3. legacy ``REPRO_PALLAS_INTERPRET=1`` (kept for existing launch scripts)
+  4. "tpu" when ``jax.default_backend()`` is a TPU, else "xla"
+
+A resolved backend with no registered implementation falls back to "xla",
+so ops stay callable on CPU even when only the reference path exists.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+BACKENDS = ("tpu", "interpret", "xla")
+_FALLBACK = {"tpu": ("tpu", "xla"),
+             "interpret": ("interpret", "xla"),
+             "xla": ("xla",)}
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+
+
+def register(name: str, **impls: Callable) -> None:
+    """Register (or extend) the per-backend implementations of one op."""
+    unknown = set(impls) - set(BACKENDS)
+    if unknown:
+        raise ValueError(
+            f"unknown backend(s) {sorted(unknown)} for op {name!r}; "
+            f"valid: {BACKENDS}")
+    _REGISTRY.setdefault(name, {}).update(impls)
+
+
+def registered() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def available_backends(name: str) -> Tuple[str, ...]:
+    impls = _REGISTRY.get(name, {})
+    return tuple(b for b in BACKENDS if b in impls)
+
+
+def resolve_backend(explicit: Optional[str] = None) -> str:
+    if explicit is not None:
+        if explicit not in BACKENDS:
+            raise ValueError(f"unknown backend {explicit!r}; valid: {BACKENDS}")
+        return explicit
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env:
+        if env not in BACKENDS:
+            raise ValueError(
+                f"REPRO_KERNEL_BACKEND={env!r} invalid; valid: {BACKENDS}")
+        return env
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+        return "interpret"
+    return "tpu" if jax.default_backend() == "tpu" else "xla"
+
+
+def get_impl(name: str, backend: Optional[str] = None) -> Callable:
+    impls = _REGISTRY.get(name)
+    if impls is None:
+        raise KeyError(f"no kernel registered under {name!r}; "
+                       f"registered: {registered()}")
+    for candidate in _FALLBACK[resolve_backend(backend)]:
+        if candidate in impls:
+            return impls[candidate]
+    raise KeyError(f"op {name!r} has no implementation for backend "
+                   f"{resolve_backend(backend)!r} and no xla fallback")
+
+
+def dispatch(name: str, *args, backend: Optional[str] = None, **kwargs):
+    return get_impl(name, backend)(*args, **kwargs)

@@ -1,54 +1,57 @@
-"""Backend dispatch for the Pallas kernels.
+"""Public kernel entry points, dispatched through ``repro.kernels.backend``.
 
 On TPU the pallas_call path runs natively; on CPU (this container, including
 the 512-device dry-run) the pure-jnp oracle runs instead so the AOT compile
-stays tractable. Set REPRO_PALLAS_INTERPRET=1 to force the kernels through
-the Pallas interpreter (tests do this per-call instead).
+stays tractable.  Backend selection is centralized in
+``backend.resolve_backend`` (``REPRO_KERNEL_BACKEND`` env var, legacy
+``REPRO_PALLAS_INTERPRET=1``, else device-based).
 """
 from __future__ import annotations
 
-import os
-from functools import partial
+import functools
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels import backend as _backend
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.retention_kernel import retention_pallas
 from repro.kernels.ssm_scan import ssm_scan_pallas
 
 
-def _use_pallas():
-    if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
-        return "interpret"
-    return "tpu" if jax.default_backend() == "tpu" else None
-
-
-def attention(q, k, v, *, causal=True):
-    mode = _use_pallas()
-    if mode == "tpu":
-        return _flash_pallas(q, k, v, causal=causal)
-    if mode == "interpret":
-        return _flash_pallas(q, k, v, causal=causal, interpret=True)
-    return ref.attention_ref(q, k, v, causal=causal)
-
-
-def ssm_scan(x, dt, A, Bc, Cc, D):
-    mode = _use_pallas()
-    if mode == "tpu":
-        return ssm_scan_pallas(x, dt, A, Bc, Cc, D)
-    if mode == "interpret":
-        return ssm_scan_pallas(x, dt, A, Bc, Cc, D, interpret=True)
-    B = x.shape[0]
-    h0 = jnp.zeros((B, A.shape[0], A.shape[1]), jnp.float32)
+def _ssm_scan_ref(x, dt, A, Bc, Cc, D):
+    h0 = jnp.zeros((x.shape[0], A.shape[0], A.shape[1]), jnp.float32)
     return ref.ssm_scan_ref(x, dt, A, Bc, Cc, D, h0)[0]
 
 
-def retention_batch(params, ts):
-    mode = _use_pallas()
-    if mode == "tpu":
-        return retention_pallas(params, ts)
-    if mode == "interpret":
-        return retention_pallas(params, ts, interpret=True)
-    return ref.retention_ref(params, ts)
+_backend.register(
+    "attention",
+    tpu=_flash_pallas,
+    interpret=functools.partial(_flash_pallas, interpret=True),
+    xla=ref.attention_ref,
+)
+_backend.register(
+    "ssm_scan",
+    tpu=ssm_scan_pallas,
+    interpret=functools.partial(ssm_scan_pallas, interpret=True),
+    xla=_ssm_scan_ref,
+)
+_backend.register(
+    "retention",
+    tpu=retention_pallas,
+    interpret=functools.partial(retention_pallas, interpret=True),
+    xla=ref.retention_ref,
+)
+
+
+def attention(q, k, v, *, causal=True, backend=None):
+    return _backend.dispatch("attention", q, k, v, causal=causal,
+                             backend=backend)
+
+
+def ssm_scan(x, dt, A, Bc, Cc, D, *, backend=None):
+    return _backend.dispatch("ssm_scan", x, dt, A, Bc, Cc, D, backend=backend)
+
+
+def retention_batch(params, ts, *, backend=None):
+    return _backend.dispatch("retention", params, ts, backend=backend)

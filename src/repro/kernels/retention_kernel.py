@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.compat import tpu_compiler_params
 from repro.kernels.ref import N_FIELDS, UT
 
 BLOCK_B = 128
@@ -81,6 +82,8 @@ def retention_pallas(params, ts, *, interpret=False):
         ],
         out_specs=pl.BlockSpec((1, BLOCK_B), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, Bp), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",)),
         interpret=interpret,
     )(p, ts[None, :].astype(jnp.float32))
     return out[0, :B]

@@ -25,8 +25,8 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import named_sharding
 from repro.configs import SHAPES, get_config, list_archs
 from repro.launch.mesh import make_production_mesh
 from repro.models import LM
@@ -187,7 +187,7 @@ def model_flops_params(cfg, params_sd):
 
 
 def _scalar_sh(mesh):
-    return NamedSharding(mesh, P())
+    return named_sharding(mesh)
 
 
 def build_cell(cfg, shape, mesh, opt_level: int = 0):

@@ -59,9 +59,9 @@ def moe_block(p, x, cfg):
     costs terabytes of all-reduce on deepseek-v3 (§Perf iteration 2)."""
     import os
     if os.environ.get("REPRO_MOE_SHARDMAP") == "1":
-        from jax._src import mesh as mesh_lib
-        env_mesh = mesh_lib.thread_resources.env.physical_mesh
-        if not env_mesh.empty and "model" in env_mesh.axis_names \
+        from repro.compat import current_mesh
+        env_mesh = current_mesh()
+        if env_mesh is not None and "model" in env_mesh.axis_names \
                 and cfg.num_experts % env_mesh.shape["model"] == 0:
             return _moe_block_shardmap(p, x, cfg, env_mesh)
     return _moe_block_gspmd(p, x, cfg)
@@ -103,8 +103,9 @@ def _moe_block_shardmap(p, x, cfg, mesh):
     """Expert parallelism via shard_map: tokens sharded over ("pod","data"),
     experts over "model"; combine = one psum("model") of the (N_local, d)
     partial outputs."""
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     B, S, d = x.shape
     E = cfg.num_experts

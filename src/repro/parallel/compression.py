@@ -48,14 +48,12 @@ def make_compressed_grad_fn(loss_fn, mesh, axis_name="data"):
 
     Returns grad_fn(params, batch, resid) -> (loss_mean, grads_mean, resid').
     Params are replicated across `axis_name`; batch is sharded on dim 0."""
-    from jax.experimental.shard_map import shard_map
+    from repro.compat import shard_map
 
     def local(params, batch, resid):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         g_mean, new_resid = ef_int8_psum_mean(grads, resid, axis_name)
         return jax.lax.pmean(loss, axis_name), g_mean, new_resid
-
-    pspec_b = jax.tree.map(lambda _: P(axis_name), jax.tree.map(lambda x: x, {}))
 
     def grad_fn(params, batch, resid):
         batch_spec = jax.tree.map(lambda _: P(axis_name), batch)

@@ -18,7 +18,9 @@ from typing import Any, Dict, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import current_mesh, named_sharding
 
 # rule tables: leaf name -> per-dim axis names (before the stacked-layer dim).
 # "D" = data/FSDP axis, "M" = model/TP axis, None = replicated.
@@ -225,21 +227,28 @@ def _key(k):
 
 
 def to_named(mesh: Mesh, spec_tree):
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+    return jax.tree.map(lambda s: named_sharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
 
 
 def maybe_shard(x, spec: P):
     """with_sharding_constraint if a mesh is active, else identity (so model
-    code can be mesh-agnostic for CPU smoke tests)."""
-    try:
-        from jax._src import mesh as mesh_lib
-        env_mesh = mesh_lib.thread_resources.env.physical_mesh
-        if env_mesh.empty:
-            return x
-        return jax.lax.with_sharding_constraint(x, NamedSharding(env_mesh, spec))
-    except Exception:
+    code can be mesh-agnostic for CPU smoke tests). Spec entries naming axes
+    the active mesh does not have are dropped (replicated), so the same spec
+    works on data-only and data x model meshes."""
+    env_mesh = current_mesh()
+    if env_mesh is None:
         return x
+    names = set(env_mesh.axis_names)
+
+    def keep(entry):
+        if isinstance(entry, tuple):
+            kept = tuple(a for a in entry if a in names)
+            return kept or None
+        return entry if entry in names else None
+
+    spec = P(*(keep(e) if e is not None else None for e in spec))
+    return jax.lax.with_sharding_constraint(x, named_sharding(env_mesh, spec))
 
 
 def hint(x, *tags):
@@ -247,14 +256,8 @@ def hint(x, *tags):
     None. Tags on non-divisible dims are dropped; no-op without an active
     mesh. This is how model code pins activation shardings (e.g. keeping the
     batch dim on "data" inside attention) without knowing the mesh."""
-    try:
-        from jax._src import mesh as mesh_lib
-        env_mesh = mesh_lib.thread_resources.env.physical_mesh
-        if env_mesh.empty:
-            return x
-    except Exception:
-        return x
-    if len(tags) != x.ndim:
+    env_mesh = current_mesh()
+    if env_mesh is None or len(tags) != x.ndim:
         return x
     spec = []
     for dim, tag in zip(x.shape, tags):
@@ -263,4 +266,4 @@ def hint(x, *tags):
             spec.append(ax)
         else:
             spec.append(None)
-    return jax.lax.with_sharding_constraint(x, NamedSharding(env_mesh, P(*spec)))
+    return jax.lax.with_sharding_constraint(x, named_sharding(env_mesh, P(*spec)))

@@ -13,6 +13,7 @@ os.environ["REPRO_MOE_SHARDMAP"] = "1"
 import json, sys
 import jax, jax.numpy as jnp, numpy as np
 sys.path.insert(0, "src")
+from repro.compat import make_mesh
 from repro.configs import get_config, reduce_config
 from repro.models import moe as moe_mod
 
@@ -20,8 +21,7 @@ cfg = reduce_config(get_config("moonshot-v1-16b-a3b"))
 p = moe_mod.init_moe(jax.random.key(0), cfg, jnp.float32)
 x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 16, cfg.d_model)),
                 jnp.float32)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 with mesh:
     y_sm, aux = jax.jit(lambda p, x: moe_mod.moe_block(p, x, cfg))(p, x)
     # gradient flows through the shard_map psum

@@ -49,12 +49,27 @@ def test_hint_is_noop_without_mesh():
     np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
+def test_maybe_shard_drops_axes_missing_from_mesh():
+    """A spec naming an axis the active mesh lacks must replicate, not raise
+    (the mesh-agnostic contract model code relies on)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh
+    from repro.parallel.sharding import maybe_shard
+    x = jnp.ones((8, 8))
+    np.testing.assert_array_equal(np.asarray(maybe_shard(x, P(None, "model"))),
+                                  np.asarray(x))      # no mesh: identity
+    with make_mesh((1,), ("data",)):                  # data-only mesh
+        y = maybe_shard(x, P(("pod", "data"), "model"))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
 _EQUIV_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, sys
 import jax, jax.numpy as jnp, numpy as np
 sys.path.insert(0, "src")
+from repro.compat import make_mesh
 from repro.configs import get_config, reduce_config
 from repro.data.pipeline import SyntheticLMData
 from repro.parallel.sharding import batch_pspec_tree, param_pspec_tree, to_named
@@ -71,8 +86,7 @@ batch = data.next_batch()
 l_ref = float(jax.jit(step)(params, opt, batch, 0)[2]["loss"])
 
 # 2x4 mesh ("data","model") sharded run
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 params_sd = jax.eval_shape(lambda: params)
 psh = to_named(mesh, param_pspec_tree(mesh, params))
 bsh = to_named(mesh, batch_pspec_tree(mesh, batch))

@@ -107,19 +107,21 @@ def test_checkpoint_checksum_detects_corruption(tmp_path):
 
 def test_checkpoint_reshard_on_restore(tmp_path):
     """Restore places leaves with target-mesh shardings (elastic restart)."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.compat import make_mesh, replicated_like
     cfg = tiny_cfg()
     params, opt = init_train_state(cfg, jax.random.key(0))
     ck = Checkpointer(tmp_path, async_write=False)
     ck.save(5, params, opt, {"seed": 0, "step": 5})
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
-    p_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), params)
-    o_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), opt)
+    mesh = make_mesh((1,), ("data",))
     _, p2, _, _ = ck.restore(params_template=params, opt_template=opt,
-                             shardings=(p_sh, o_sh))
+                             shardings=(replicated_like(mesh, params),
+                                        replicated_like(mesh, opt)))
     leaf = jax.tree.leaves(p2)[0]
     assert leaf.sharding.mesh.axis_names == ("data",)
+    # mesh= alone must reshard too (previously a silently-ignored kwarg)
+    _, p3, _, _ = ck.restore(params_template=params, opt_template=opt,
+                             mesh=mesh)
+    assert jax.tree.leaves(p3)[0].sharding.mesh.axis_names == ("data",)
 
 
 # ------------------------------------------------------------------ supervisor
@@ -166,10 +168,9 @@ def test_supervisor_detects_stragglers(tmp_path):
 def test_ef_int8_psum_single_axis():
     """On a size-1 axis the compressed mean must equal plain quantization,
     and error feedback must carry the residual exactly."""
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh, shard_map
+    mesh = make_mesh((1,), ("data",))
     rng = np.random.default_rng(0)
     g = {"w": jnp.asarray(rng.normal(size=(32, 32)), jnp.float32)}
     r = init_residuals(g)
@@ -189,10 +190,9 @@ def test_ef_int8_psum_single_axis():
 def test_ef_int8_bias_vanishes_over_steps():
     """Accumulated compressed updates converge to accumulated true updates."""
     rng = np.random.default_rng(1)
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh, shard_map
+    mesh = make_mesh((1,), ("data",))
     g_seq = [jnp.asarray(rng.normal(size=(16,)), jnp.float32) for _ in range(50)]
     r = {"w": jnp.zeros((16,))}
     acc_c = jnp.zeros((16,))
