@@ -21,6 +21,8 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
+from repro.compat import replicated_like
+
 SEP = "|"
 
 
@@ -112,7 +114,8 @@ class Checkpointer:
                 opt_template=None, mesh=None, shardings=None):
         """Returns (step, params, opt_state, data_state). With `shardings`
         (pytrees of NamedSharding for the *target* mesh) leaves are placed
-        sharded — reshard-on-restore."""
+        sharded — reshard-on-restore. Passing `mesh=` alone replicates every
+        leaf onto the target mesh (the elastic-downscale default)."""
         self.wait()
         step = step if step is not None else self.latest_step()
         if step is None:
@@ -130,6 +133,9 @@ class Checkpointer:
             if params_template is not None else params_np
         opt = _unflatten_into(opt_template, opt_np) \
             if opt_template is not None else opt_np
+        if shardings is None and mesh is not None:
+            shardings = (replicated_like(mesh, params),
+                         replicated_like(mesh, opt))
         if shardings is not None:
             p_sh, o_sh = shardings
             params = jax.tree.map(lambda x, s: jax.device_put(x, s), params, p_sh)
