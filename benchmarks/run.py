@@ -58,6 +58,19 @@ def main() -> None:
     print(f"retention_kernel_interpret,{us:.0f},\"256-config RK4 transient "
           f"(Pallas interpret; TPU target is the native path)\"")
 
+    # joint composition throughput (full record: python -m benchmarks.hetero_dse)
+    from repro.core import gainsight
+    from repro.hetero import compose
+
+    def compose_all():
+        reports = [compose(table, t) for t in gainsight.TASKS]
+        return reports, sum(r.matches(gainsight.TABLE2_EXPECTED[r.task.task_id])
+                            for r in reports)
+
+    (_, n_match), us = _timed(compose_all)
+    print(f"hetero_compose,{us:.0f},\"joint (L1,L2) composition for 7 tasks; "
+          f"Table 2 matches {n_match}/7\"")
+
     # per-arch heterogeneous-memory DSE (the paper's technique on our archs)
     try:
         from benchmarks.arch_dse import arch_dse_table

@@ -1,27 +1,47 @@
-"""Heterogeneous memory design-space exploration (paper §5.4) through the
-``repro.api`` façade: ``explore()`` reproduces Table 2 in one call, then the
-beyond-paper extras run as chainable ``DesignTable`` queries (Pareto front)
-and ``Compiler.gradient_size`` (continuous sizing).
+"""Heterogeneous memory design-space exploration through ``repro.hetero``:
+``Compiler.compose`` scores every joint (L1 tech, L2 tech) system design per
+task and prints the full composition report — Table-2 labels, per-bucket
+macro picks + tiling, and system area/power/bandwidth — instead of the old
+independent per-level picks. The beyond-paper extras (Pareto front, gradient
+sizing) ride on the same ``DesignTable``.
 
     pip install -e . && python examples/heterogeneous_dse.py
+
+Docs: docs/API.md (façade reference), docs/ARCHITECTURE.md (layer map).
 """
-from repro.api import Compiler, MacroConfig, explore
+from repro.api import Compiler, ComposePolicy, MacroConfig
 from repro.core import gainsight
 
 
 def main():
-    report = explore(tasks=gainsight.TASKS, cache="artifacts/dse_cache")
-    table = report.table
+    compiler = Compiler()
+    table = compiler.table(cache="artifacts/dse_cache")
     print(f"characterized {len(table)} macro configurations\n")
 
-    print("== Table 2: optimal heterogeneous L1/L2 per task ==")
-    labels = report.labels()
-    for t in report.tasks:
-        got = labels[t.task_id]
+    print("== Table 2 via the joint composition engine (repro.hetero) ==")
+    reports = {}
+    for t in gainsight.TASKS:
+        rep = compiler.compose(t, space=table, cache="artifacts/dse_cache")
+        reports[t.task_id] = rep
+        got = rep.labels()
         exp = gainsight.TABLE2_EXPECTED[t.task_id]
         tick = "OK " if got == exp else "!! "
         print(f"  {tick}task {t.task_id} {t.name:24s} "
               f"L1: {got['L1']:14s} L2: {got['L2']}")
+
+    print("\n== composition report, task 7 (3-technology L2) ==")
+    print(reports[7].summary())
+
+    print("\n== joint tradeoff: same task under a power-first objective ==")
+    rep_p = compiler.compose(
+        gainsight.TASKS[6], space=table,
+        compose_policy=ComposePolicy(objective="power",
+                                     candidate_mode="all_feasible"))
+    m0, m1 = reports[7].best.metrics, rep_p.best.metrics
+    print(f"  preference: {m0['p_w'] * 1e3:8.3f} mW  "
+          f"{m0['area_um2'] / 1e6:7.3f} mm^2   {reports[7].labels()}")
+    print(f"  power-min:  {m1['p_w'] * 1e3:8.3f} mW  "
+          f"{m1['area_um2'] / 1e6:7.3f} mm^2   {rep_p.labels()}")
 
     print("\n== Pareto front (area, leak+refresh power, delay) ==")
     front = (table

@@ -13,6 +13,7 @@ _API_NAMES = (
     "MacroConfig", "Macro", "Compiler",
     "DesignTable", "design_space",
     "explore", "DSEReport",
+    "compose", "ComposePolicy", "CompositionReport",
     "gradient_size_macro", "characterize_call_count",
 )
 

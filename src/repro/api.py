@@ -1,6 +1,10 @@
 """The OpenGCRAM-JAX compiler façade: one API from MacroConfig to DSE report.
 
-Three pillars (everything else in ``repro.core`` is the physics under them):
+Units everywhere in this module: frequencies [Hz], energies [J], areas
+[µm²], powers [W], times/lifetimes [s], capacities [bits].
+
+Four pillars (everything else in ``repro.core``/``repro.hetero`` is the
+physics and composition machinery under them):
 
 ``Compiler``
     ``Compiler().compile(cfg) -> Macro``. A ``Macro`` bundles the PPA
@@ -17,9 +21,15 @@ Three pillars (everything else in ``repro.core`` is the physics under them):
     re-characterization.
 
 ``explore(space, tasks, policy=...) -> DSEReport``
-    grid -> characterize -> per-task feasibility -> heterogeneous
-    composition, in one call: Table-2 labels, per-bucket picks, and Fig-11
+    grid -> characterize -> per-task feasibility -> independent per-level
+    selection, in one call: Table-2 labels, per-bucket picks, and Fig-11
     shmoo maps, under an explicit ``SelectionPolicy``.
+
+``compose(space, task, ...) -> CompositionReport``
+    the joint counterpart (``repro.hetero``): whole (L1 tech, L2 tech)
+    system designs scored in one batched jnp evaluation — system area
+    [µm²], total power incl. refresh [W], bandwidth margin, capacity fit —
+    and ranked under a ``ComposePolicy``.
 
     >>> from repro.api import Compiler, explore
     >>> macro = Compiler().compile(mem_type="gc_sisi", word_size=32,
@@ -50,12 +60,16 @@ from repro.core.select import (  # noqa: F401  (re-exported façade names)
     LevelSelection, SelectionPolicy, TaskReq, as_task_req, family_of,
     feasible_mask, pareto_mask, select_level,
 )
+from repro.hetero.compose import (  # noqa: F401  (re-exported façade names)
+    ComposePolicy, CompositionReport, compose,
+)
 
 __all__ = [
     "Bucket", "LevelReq", "TaskReq", "SelectionPolicy",
     "MacroConfig", "Macro", "Compiler",
     "DesignTable", "design_space",
     "explore", "DSEReport",
+    "compose", "ComposePolicy", "CompositionReport",
     "gradient_size_macro", "characterize_call_count",
 ]
 
@@ -103,7 +117,13 @@ def design_space(mem_types: Sequence[str] = DEFAULT_MEM_TYPES,
                  num_words: Sequence[int] = (16, 32, 64, 128, 256, 512),
                  ls_options: Sequence[bool] = (False, True),
                  banks: Sequence[int] = (1,)) -> List[MacroConfig]:
-    """Enumerate the paper's §5.4 config grid (SRAM has no level shifter)."""
+    """Enumerate the paper's §5.4 config grid (SRAM has no level shifter).
+
+    ``mem_types``  bitcell menu (keys of ``repro.core.bitcells.BITCELLS``);
+    ``word_sizes`` word widths [bits]; ``num_words`` depths [words];
+    ``ls_options`` write-wordline level-shifter on/off (gain cells only).
+    Returns the full cross-product as ``MacroConfig`` objects.
+    """
     out = []
     for mt in mem_types:
         for wz in word_sizes:
@@ -302,13 +322,16 @@ class DesignTable:
 
     def feasible(self, f_hz: float, lifetime_s: float,
                  allow_refresh: bool = False) -> "DesignTable":
-        """Configs that sustain ``f_hz`` and retain data for ``lifetime_s``."""
+        """Configs that sustain read frequency ``f_hz`` [Hz] and retain data
+        for ``lifetime_s`` [s] (``allow_refresh`` admits refreshed gain
+        cells, paper §5.3). Returns the filtered table."""
         return self.filter(self.shmoo(f_hz, lifetime_s,
                                       allow_refresh=allow_refresh))
 
     def shmoo(self, f_hz: float, lifetime_s: float,
               allow_refresh: bool = False) -> np.ndarray:
-        """Fig 11: boolean feasibility per row (green/red), not filtered."""
+        """Fig 11: boolean feasibility per row (green/red) for one
+        (``f_hz`` [Hz], ``lifetime_s`` [s]) point — a mask, not filtered."""
         return feasible_mask(self._metrics, f_hz, lifetime_s,
                              allow_refresh=allow_refresh)
 
@@ -362,7 +385,10 @@ def grid_hash(configs: Sequence[MacroConfig]) -> str:
 class Macro:
     """One compiled memory macro: config + PPA + artifact emission.
 
-    Produced by ``Compiler.compile`` (fresh characterization) or
+    ``ppa`` is the full characterization as plain floats: ``f_*_hz`` [Hz],
+    ``area_*_um2`` [µm²], ``e_*_j`` [J], ``p_*_w`` [W], ``t_*_s`` /
+    ``retention_s`` [s], ``bandwidth_*_bits_s`` [bit/s]. Produced by
+    ``Compiler.compile`` (fresh characterization) or
     ``DesignTable.macro``/``best`` (PPA lifted from the table)."""
     config: MacroConfig
     ppa: Dict[str, float]
@@ -457,6 +483,32 @@ class Compiler:
         if space is None:
             space = self.design_space()
         return explore(space=space, tasks=tasks, policy=policy, cache=cache)
+
+    def compose(self, task, space: SpaceLike = None,
+                policy: Optional[SelectionPolicy] = None,
+                compose_policy=None, cache: Union[None, str, Path] = None,
+                sharded: bool = False):
+        """Joint heterogeneous composition for one task -> CompositionReport.
+
+        Where ``explore`` picks each cache level independently, ``compose``
+        scores every joint (L1 tech, L2 tech) system design — system area
+        [µm²], total power incl. refresh [W], bandwidth margin, capacity fit
+        — in one batched jnp evaluation and ranks them under an explicit
+        ``repro.hetero.ComposePolicy``. The default policy reproduces the
+        paper's Table-2 selections through the joint path.
+
+        ``task``    anything ``as_task_req`` understands (a
+                    ``gainsight.Task``, a profiler ``TaskReq``, a mapping).
+        ``cache``   directory shared with the DesignTable npz cache; repeat
+                    calls skip both the vmap characterization and the
+                    composition scoring.
+        ``sharded`` spread the composition grid across all visible devices.
+        """
+        if space is None:
+            space = self.design_space()
+        return compose(space=space, task=task, policy=policy,
+                       compose_policy=compose_policy, cache=cache,
+                       sharded=sharded)
 
     def gradient_size(self, config: MacroConfig, **kw) -> Dict[str, float]:
         """Beyond-paper continuous device sizing (see gradient_size_macro)."""
@@ -563,7 +615,12 @@ def gradient_size_macro(cfg: MacroConfig, steps: int = 200,
     bitcell to minimize  t_read * (1 + w*area_overhead).
 
     OpenGCRAM explores discrete configs only; a differentiable compiler can
-    descend the continuous sizing space directly."""
+    descend the continuous sizing space directly.
+
+    Returns a dict: ``w_read_um``/``w_write_um`` [µm],
+    ``t_cell_before_s``/``t_cell_after_s`` [s],
+    ``area_before_um2``/``area_after_um2`` [µm²], and ``speedup`` (ratio).
+    """
     import jax
     import jax.numpy as jnp
 

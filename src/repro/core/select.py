@@ -188,17 +188,27 @@ class LevelSelection:
         return all(p.family is not None for p in self.picks)
 
 
+def composition_label(families) -> str:
+    """Paper Table-2 nomenclature for one level: the distinct non-None
+    families in bucket order joined with " + ", or "infeasible" when no
+    bucket found a technology. Shared by ``select_level`` (greedy path) and
+    ``repro.hetero`` (joint composition path) so the labeling rule cannot
+    drift between them."""
+    fams: list = []
+    for fam in families:
+        if fam and fam not in fams:
+            fams.append(fam)
+    return " + ".join(DISPLAY[f] for f in fams) if fams else "infeasible"
+
+
 def select_level(metrics: Mapping[str, np.ndarray], families: np.ndarray,
                  level: LevelReq,
                  policy: SelectionPolicy = SelectionPolicy()) -> LevelSelection:
     """One technology per bucket; label joins the distinct families in bucket
     order (paper Table 2)."""
     picks = []
-    fams: list = []
     for b in level.buckets:
         fam, idx = select_bucket_idx(metrics, families, b, policy)
         picks.append(BucketPick(bucket=b, family=fam, config_idx=idx))
-        if fam and fam not in fams:
-            fams.append(fam)
-    label = " + ".join(DISPLAY[f] for f in fams) if fams else "infeasible"
+    label = composition_label(p.family for p in picks)
     return LevelSelection(level=level, label=label, picks=tuple(picks))

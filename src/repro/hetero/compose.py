@@ -1,0 +1,370 @@
+"""Joint (L1, L2, ...) composition: assemble, score, and rank system designs.
+
+``compose(space, task)`` is the heterogeneous counterpart of
+``repro.api.explore``: instead of picking each cache level independently it
+forms the cross-product of per-(level, bucket) candidates (see
+``repro.hetero.candidates``), prices every whole-system composition in one
+batched jnp evaluation (``repro.hetero.system``), and ranks them under a
+``ComposePolicy``. The default ``objective="preference"`` reproduces the
+paper's greedy Table-2 selections exactly (the preference-rank sum of
+independent slots decomposes, and per-family representatives are chosen with
+the same power-then-area order as ``select_bucket_idx``); the other
+objectives — and the optional system area/power budgets — are where joint
+evaluation earns its keep, trading technologies across levels against a
+shared constraint.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.select import (BucketPick, LevelReq, SelectionPolicy,
+                               TaskReq, as_task_req, composition_label)
+from repro.hetero.candidates import BucketCandidates, level_candidates
+from repro.hetero.system import SYSTEM_METRICS, score_grid, tiles_for
+
+OBJECTIVES = ("preference", "power", "area", "balanced")
+
+
+@dataclass(frozen=True)
+class ComposePolicy:
+    """How the composition grid is built and ranked.
+
+    ``objective``  ranking rule:
+        - "preference": paper policy — minimize preference-rank sum, then
+          static power [W], then area [µm²] (Table-2 parity mode);
+        - "power": minimize total power [W], then area;
+        - "area": minimize system area [µm²], then power;
+        - "balanced": minimize area/min_area + power/min_power.
+    ``candidate_mode``  "per_family_best" (one row per technology family per
+        bucket, chosen by the paper's power-then-area rule — the parity
+        mode) or "all_feasible" (every feasible row). NOTE: under
+        "per_family_best" the non-preference objectives optimize over those
+        greedy representatives only; use "all_feasible" when the true
+        power-/area-optimum over every feasible row is wanted.
+    ``max_candidates_per_bucket``  cap per slot in "all_feasible" mode.
+    ``max_compositions``  hard cap on the grid size; candidate lists are
+        trimmed worst-first until the product fits. ``truncated`` is set on
+        the report whenever this or ``max_candidates_per_bucket`` dropped
+        feasible rows, i.e. whenever the grid was not exhaustive.
+    ``area_budget_um2`` / ``power_budget_w``  optional system budgets [µm²] /
+        [W]; compositions exceeding either are marked infeasible and sort
+        after every feasible one. Each active budget pins its per-slot
+        argmin rows into the grid past any cap, so the global min-area /
+        min-power composition is always evaluated and ``n_feasible == 0``
+        proves the budget is genuinely unmeetable.
+    ``top_k``  how many ranked compositions the report materializes.
+    """
+    objective: str = "preference"
+    candidate_mode: str = "per_family_best"
+    max_candidates_per_bucket: int = 64
+    max_compositions: int = 200_000
+    area_budget_um2: Optional[float] = None
+    power_budget_w: Optional[float] = None
+    top_k: int = 8
+
+    def __post_init__(self):
+        if self.objective not in OBJECTIVES:
+            raise ValueError(f"unknown objective {self.objective!r}; "
+                             f"choose from {OBJECTIVES}")
+
+
+@dataclass(frozen=True)
+class LevelComposition:
+    """One cache level inside a composition: per-bucket picks + tiling.
+
+    ``picks[i]`` is the (family, table row) serving bucket ``i``;
+    ``tiles[i]`` is how many copies of that macro cover the bucket's
+    capacity share. ``label`` joins the distinct families in bucket order
+    (paper Table-2 nomenclature), or "infeasible" when no bucket found a
+    technology.
+    """
+    level: LevelReq
+    label: str
+    picks: Tuple[BucketPick, ...]
+    tiles: Tuple[int, ...] = field(default_factory=tuple)
+
+    @property
+    def feasible(self) -> bool:
+        return all(p.family is not None for p in self.picks)
+
+
+@dataclass(frozen=True)
+class Composition:
+    """One whole-system design: every level composed, system metrics attached.
+
+    ``metrics`` holds the batched-scorer outputs for this design —
+    ``area_um2`` [µm²], ``p_static_w``/``p_dyn_w``/``p_w`` [W],
+    ``bw_margin`` (min f_op/f_required ratio), ``capacity_bits`` [bits],
+    ``overprovision`` (ratio ≥ 1 when every slot is covered).
+    """
+    levels: Dict[str, LevelComposition]
+    metrics: Dict[str, float]
+    pref_rank: int
+    feasible: bool
+
+    def labels(self) -> Dict[str, str]:
+        """Table-2 style ``{"L1": label, "L2": label}`` for this design."""
+        return {name: lc.label for name, lc in self.levels.items()}
+
+    def __repr__(self) -> str:
+        cells = "  ".join(f"{n}: {lc.label}" for n, lc in self.levels.items())
+        a, p = self.metrics["area_um2"], self.metrics["p_w"]
+        stats = (f"area={a:.0f}um2, p={p * 1e3:.3f}mW"
+                 if math.isfinite(a) else "infeasible slots")
+        return f"Composition({cells}; {stats})"
+
+
+@dataclass(frozen=True)
+class CompositionReport:
+    """Result of one ``compose()`` call.
+
+    ``ranked`` is best-first (``best`` is ``ranked[0]``); ``n_compositions``
+    is the evaluated grid size and ``n_feasible`` how many passed slot
+    feasibility + budgets. ``truncated`` flags a non-exhaustive grid: either
+    ``max_compositions`` trimmed candidate lists or
+    ``max_candidates_per_bucket`` capped a slot.
+    """
+    table: object                       # repro.api.DesignTable
+    task: TaskReq
+    policy: SelectionPolicy
+    compose_policy: ComposePolicy
+    ranked: Tuple[Composition, ...]
+    n_compositions: int
+    n_feasible: int
+    truncated: bool = False
+
+    @property
+    def best(self) -> Composition:
+        return self.ranked[0]
+
+    def labels(self) -> Dict[str, str]:
+        """Table 2 cell for this task: ``{"L1": label, "L2": label}``."""
+        return self.best.labels()
+
+    def matches(self, expected: Mapping[str, str]) -> bool:
+        """Does the best composition reproduce ``expected`` level labels?"""
+        got = self.labels()
+        return all(got.get(lvl) == lab for lvl, lab in expected.items())
+
+    def pick_macro(self, level: str, bucket: int = 0):
+        """The selected macro (as ``repro.api.Macro``) for one slot."""
+        pick = self.best.levels[level].picks[bucket]
+        if pick.config_idx < 0:
+            raise LookupError(f"{self.task.task_id} {level} bucket {bucket} "
+                              f"is infeasible under {self.policy}")
+        return self.table.macro(pick.config_idx)
+
+    def summary(self) -> str:
+        b = self.best
+        m = b.metrics
+        lines = [f"task {self.task.task_id} {self.task.name}: "
+                 f"{self.n_compositions} compositions evaluated, "
+                 f"{self.n_feasible} feasible"
+                 + (" (truncated grid)" if self.truncated else "")]
+        for name, lc in b.levels.items():
+            per = "  ".join(
+                f"[{i}] {p.family or '-'} x{t}"
+                for i, (p, t) in enumerate(zip(lc.picks, lc.tiles)))
+            lines.append(f"  {name}: {lc.label:40s} {per}")
+        if math.isfinite(m["area_um2"]):
+            lines.append(
+                f"  system: area {m['area_um2'] / 1e6:.3f} mm^2, "
+                f"power {m['p_w'] * 1e3:.3f} mW "
+                f"(static {m['p_static_w'] * 1e3:.3f} mW), "
+                f"bw margin {m['bw_margin']:.2f}x, "
+                f"overprovision {m['overprovision']:.2f}x")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# grid assembly
+# ---------------------------------------------------------------------------
+
+
+def _trim_to_budget(slots: Sequence[BucketCandidates],
+                    max_compositions: int):
+    """Drop worst-ranked candidates (from the largest slot first) until the
+    cross-product fits, never dropping a budget-pinned row.
+    Returns (candidate lists, truncated flag)."""
+    lists = [list(bc.candidates) for bc in slots]
+    pinned = [set(bc.pinned) for bc in slots]
+    truncated = False
+    # math.prod: arbitrary-precision (np.prod would wrap in int64 and skip
+    # trimming entirely for ~11+ slots at the 64-candidate cap)
+    while math.prod(len(c) for c in lists) > max_compositions:
+        dropped = False
+        for s in sorted(range(len(lists)), key=lambda s: -len(lists[s])):
+            if len(lists[s]) <= 1:
+                continue
+            # lists are ordered best-first: drop the worst unpinned row
+            for j in range(len(lists[s]) - 1, -1, -1):
+                if lists[s][j].config_idx not in pinned[s]:
+                    lists[s].pop(j)
+                    dropped = truncated = True
+                    break
+            if dropped:
+                break
+        if not dropped:      # nothing left but pins/singletons: stop (the
+            break            # excess is bounded by a few pins per slot)
+    return lists, truncated
+
+
+def _composition_grid(slots: Sequence[BucketCandidates],
+                      max_compositions: int):
+    """Cross-product of per-slot candidates.
+
+    Returns ``(idx (J,S) int32, rank_sum (J,), truncated)``.
+    """
+    lists, truncated = _trim_to_budget(slots, max_compositions)
+    counts = [len(c) for c in lists]
+    pos = np.indices(counts).reshape(len(counts), -1)      # (S, J)
+    idx = np.empty(pos.shape[::-1], np.int32)              # (J, S)
+    ranks = np.zeros(pos.shape[1], np.int64)
+    for s, cands in enumerate(lists):
+        cfg = np.array([c.config_idx for c in cands], np.int32)
+        rk = np.array([c.pref_rank for c in cands], np.int64)
+        idx[:, s] = cfg[pos[s]]
+        ranks += rk[pos[s]]
+    return idx, ranks, truncated
+
+
+def _order(scores: Dict[str, np.ndarray], rank_sum: np.ndarray,
+           feasible: np.ndarray, cp: ComposePolicy) -> np.ndarray:
+    """Best-first permutation of the composition grid under the objective."""
+    infeas = (~feasible).astype(np.int64)
+    big = np.finfo(np.float64).max
+
+    def finite(name):
+        return np.nan_to_num(np.asarray(scores[name], np.float64), posinf=big)
+
+    area, p_st, p_w = finite("area_um2"), finite("p_static_w"), finite("p_w")
+    if cp.objective == "preference":
+        keys = (area, p_st, rank_sum, infeas)
+    elif cp.objective == "power":
+        keys = (area, p_w, infeas)
+    elif cp.objective == "area":
+        keys = (p_w, area, infeas)
+    else:                                           # balanced
+        fa = area[feasible] if feasible.any() else area
+        fp = p_w[feasible] if feasible.any() else p_w
+        a0 = max(float(np.min(fa)), 1e-30)
+        p0 = max(float(np.min(fp)), 1e-30)
+        keys = (area / a0 + p_w / p0, infeas)
+    return np.lexsort(keys)                # last key is the primary sort
+
+
+# ---------------------------------------------------------------------------
+# compose
+# ---------------------------------------------------------------------------
+
+
+def _materialize(table, task: TaskReq, idx_row: np.ndarray,
+                 tiles_row: np.ndarray, metrics_row: Dict[str, float],
+                 rank: int, feasible: bool) -> Composition:
+    """Build one Composition dataclass from a scored grid row (slot order:
+    levels in task order, buckets in bucket order)."""
+    fam_col = np.asarray(table.families)
+    levels: Dict[str, LevelComposition] = {}
+    s = 0
+    for name, level in task.levels.items():
+        picks, tiles = [], []
+        for bucket in level.buckets:
+            cfg = int(idx_row[s])
+            fam = str(fam_col[cfg]) if cfg >= 0 else None
+            picks.append(BucketPick(bucket=bucket, family=fam,
+                                    config_idx=cfg))
+            tiles.append(int(tiles_row[s]))
+            s += 1
+        levels[name] = LevelComposition(
+            level=level, label=composition_label(p.family for p in picks),
+            picks=tuple(picks), tiles=tuple(tiles))
+    return Composition(levels=levels, metrics=metrics_row,
+                       pref_rank=rank, feasible=feasible)
+
+
+def compose(space=None, task=None, policy: Optional[SelectionPolicy] = None,
+            compose_policy: Optional[ComposePolicy] = None,
+            cache=None, sharded: bool = False) -> CompositionReport:
+    """Joint heterogeneous composition for one task.
+
+    ``space``   MacroConfig list, a built ``DesignTable``, or None for the
+                paper's §5.4 grid (characterized via the cached vmap path).
+    ``task``    anything ``repro.core.select.as_task_req`` understands —
+                a ``gainsight.Task``, a ``TaskReq`` from
+                ``repro.profiler.traffic.arch_task``, or a plain mapping.
+    ``policy``  feasibility/preference policy (paper default).
+    ``compose_policy``  grid + ranking policy (see ``ComposePolicy``).
+    ``cache``   directory for BOTH the DesignTable npz cache and the
+                composition-report npz cache; a repeated ``compose()`` on the
+                same (grid, task, policies) re-runs neither the vmap
+                characterization nor the batched scoring.
+    ``sharded`` split the composition grid across every visible device
+                (identical results; throughput only).
+    """
+    from repro.api import DesignTable           # runtime: avoids module cycle
+    if task is None:
+        raise TypeError("compose() requires a task "
+                        "(e.g. repro.core.gainsight.TASKS[0])")
+    task = as_task_req(task)
+    policy = policy or SelectionPolicy()
+    cp = compose_policy or ComposePolicy()
+    table = DesignTable.build(space, cache=cache)
+
+    if cache is not None:
+        from repro.hetero import cache as cache_mod
+        hit = cache_mod.load_report(cache, table, task, policy, cp)
+        if hit is not None:
+            return hit
+
+    metrics = table.metrics
+    fam_col = table.families
+    # candidate lists are ordered by the active objective's tiled slot
+    # contribution so per-bucket caps and grid trimming discard the
+    # objective's *worst* rows, not its best; active budgets pin their
+    # per-slot argmin rows into the grid so an all-infeasible result proves
+    # the budget is truly unmeetable (not a cap artifact)
+    order_by = cp.objective if cp.objective in ("power", "area", "balanced") \
+        else "preference"
+    ensure = tuple(k for k, budget in (("area", cp.area_budget_um2),
+                                       ("power", cp.power_budget_w))
+                   if budget is not None)
+    slots: Tuple[BucketCandidates, ...] = tuple(
+        bc for level in task.levels.values()
+        for bc in level_candidates(metrics, fam_col, level, policy,
+                                   mode=cp.candidate_mode,
+                                   max_per_bucket=cp.max_candidates_per_bucket,
+                                   order_by=order_by, ensure_orders=ensure))
+    cap_bits = np.array([bc.capacity_bits for bc in slots], np.float64)
+    f_req = np.array([bc.bucket.f_hz for bc in slots], np.float64)
+
+    idx, rank_sum, truncated = _composition_grid(slots, cp.max_compositions)
+    truncated = truncated or any(bc.capped for bc in slots)
+    scores = score_grid(metrics, idx, cap_bits, f_req, sharded=sharded)
+
+    feasible = np.all(idx >= 0, axis=1)
+    if cp.area_budget_um2 is not None:
+        feasible &= scores["area_um2"] <= cp.area_budget_um2
+    if cp.power_budget_w is not None:
+        feasible &= scores["p_w"] <= cp.power_budget_w
+
+    order = _order(scores, rank_sum, feasible, cp)
+    top = order[:max(cp.top_k, 1)]
+    tiles = tiles_for(metrics, idx[top], cap_bits)
+    ranked = tuple(
+        _materialize(table, task, idx[j], tiles[k],
+                     {m: float(scores[m][j]) for m in SYSTEM_METRICS},
+                     int(rank_sum[j]), bool(feasible[j]))
+        for k, j in enumerate(top))
+    report = CompositionReport(table=table, task=task, policy=policy,
+                               compose_policy=cp, ranked=ranked,
+                               n_compositions=int(idx.shape[0]),
+                               n_feasible=int(feasible.sum()),
+                               truncated=truncated)
+    if cache is not None:
+        from repro.hetero import cache as cache_mod
+        cache_mod.save_report(cache, report, idx[top])
+    return report

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import json
 from pathlib import Path
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence
 
 from repro.configs import SHAPES, get_config
 from repro.core.select import Bucket, LevelReq, TaskReq
@@ -96,8 +96,32 @@ def arch_requirements(arch: str, shape_name: str,
 
 def arch_task(arch: str, shape_name: str,
               rec: Optional[dict] = None) -> TaskReq:
-    """One (arch x shape) cell as a TaskReq for ``repro.api.explore``."""
+    """One (arch x shape) cell as a TaskReq for ``repro.api.explore`` or
+    ``repro.api.Compiler.compose`` (both consume the same normal form)."""
     reqs = arch_requirements(arch, shape_name, rec)
     return TaskReq(task_id=f"{arch}/{shape_name}",
                    name=f"{arch} {shape_name}",
                    levels={"L1": reqs["L1"], "L2": reqs["L2"]})
+
+
+def available_arch_tasks(shapes: Sequence[str] = ("train_4k", "decode_32k"),
+                         archs: Optional[Sequence[str]] = None,
+                         mesh: str = "pod16x16",
+                         outdir: str = "artifacts/dryrun") -> List[TaskReq]:
+    """Every (arch x shape) cell with a clean dry-run record, as TaskReqs.
+
+    This is the profiler-side requirements source for the composition engine
+    (the GainSight paper tasks in ``repro.core.gainsight`` are the other).
+    ``mesh`` selects which dry-run mesh's records to read (``"pod2x16x16"``
+    for ``--multi-pod`` runs). Fresh checkouts without ``artifacts/dryrun``
+    simply get an empty list, so callers degrade gracefully instead of
+    raising.
+    """
+    from repro.configs import ALL_ARCHS
+    tasks: List[TaskReq] = []
+    for arch in (archs if archs is not None else ALL_ARCHS):
+        for shape in shapes:
+            rec = load_dryrun_record(arch, shape, mesh=mesh, outdir=outdir)
+            if rec is not None:
+                tasks.append(arch_task(arch, shape, rec))
+    return tasks

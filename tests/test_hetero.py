@@ -1,0 +1,312 @@
+"""The repro.hetero composition engine: Table-2 parity through the joint
+path, per-slot parity with select_level, system-metric arithmetic, caching
+(neither the vmap characterization nor the batched scoring re-runs), budgets/
+objectives/truncation, and sharded-vs-single-device equivalence."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import Compiler, DesignTable, design_space
+from repro.core import gainsight
+from repro.core.select import (Bucket, LevelReq, SelectionPolicy, TaskReq,
+                               select_level)
+from repro.hetero import (ComposePolicy, bucket_candidates, compose,
+                          composition_eval_count, level_candidates)
+from repro.hetero.system import SYSTEM_METRICS, score_grid, tiles_for
+
+
+@pytest.fixture(scope="module")
+def table():
+    return DesignTable.from_configs(design_space())
+
+
+# ------------------------------------------------------------------- parity
+def test_compose_reproduces_table2(table):
+    """All 7 paper selections, through the joint composition path."""
+    for t in gainsight.TASKS:
+        rep = compose(table, t)
+        exp = gainsight.TABLE2_EXPECTED[t.task_id]
+        assert rep.labels() == exp, f"task {t.task_id}: {rep.labels()}"
+        assert rep.matches(exp)
+    assert sum(compose(table, t).matches(gainsight.TABLE2_EXPECTED[t.task_id])
+               for t in gainsight.TASKS) == 7
+
+
+def test_compose_picks_match_select_level_rows(table):
+    """Default policy: the joint winner's per-slot rows equal the greedy
+    per-level picks exactly (not just the labels)."""
+    metrics, fams = table.metrics, table.families
+    for t in gainsight.TASKS:
+        rep = compose(table, t)
+        for name, level in (("L1", t.l1), ("L2", t.l2)):
+            greedy = select_level(metrics, fams, level)
+            joint = rep.best.levels[name]
+            assert [p.config_idx for p in joint.picks] == \
+                [p.config_idx for p in greedy.picks], (t.task_id, name)
+            assert joint.label == greedy.label
+
+
+def test_compose_via_compiler_facade(table):
+    rep = Compiler().compose(gainsight.TASKS[4])
+    assert rep.labels() == gainsight.TABLE2_EXPECTED[5]
+    m = rep.pick_macro("L2", 0)
+    assert m.family == rep.best.levels["L2"].picks[0].family
+    assert "task 5" in rep.summary()
+
+
+# ----------------------------------------------------------- system metrics
+def test_system_metrics_arithmetic(table):
+    """Recompute the winner's system metrics by hand from the table rows."""
+    t = gainsight.TASKS[6]                       # 4 slots, 3 families
+    rep = compose(table, t)
+    b = rep.best
+    area = p_static = p_dyn = cap = 0.0
+    req_bits = 0.0
+    margins = []
+    for name, level in (("L1", t.l1), ("L2", t.l2)):
+        lc = b.levels[name]
+        for pick, tiles, bucket in zip(lc.picks, lc.tiles, level.buckets):
+            row = rep.table.row(pick.config_idx)
+            need = level.capacity_bits * bucket.frac
+            assert tiles == int(np.ceil(need / row["bits"]))
+            area += tiles * row["area_um2"]
+            p_static += tiles * (row["p_leak_w"] + row["p_refresh_w"])
+            p_dyn += row["e_read_j"] * bucket.f_hz
+            cap += tiles * row["bits"]
+            req_bits += need
+            margins.append(row["f_op_hz"] / bucket.f_hz)
+    m = b.metrics
+    assert m["area_um2"] == pytest.approx(area, rel=1e-5)
+    assert m["p_static_w"] == pytest.approx(p_static, rel=1e-5)
+    assert m["p_dyn_w"] == pytest.approx(p_dyn, rel=1e-5)
+    assert m["p_w"] == pytest.approx(p_static + p_dyn, rel=1e-5)
+    assert m["bw_margin"] == pytest.approx(min(margins), rel=1e-5)
+    assert m["bw_margin"] >= 1.0                 # feasibility implies margin
+    assert m["capacity_bits"] == pytest.approx(cap, rel=1e-5)
+    assert m["overprovision"] == pytest.approx(cap / req_bits, rel=1e-5)
+    assert m["overprovision"] >= 1.0
+
+
+def test_candidates_respect_policy_and_order(table):
+    metrics, fams = table.metrics, table.families
+    b = Bucket(1.0, 0.5e9, 1e-4)
+    bc = bucket_candidates(metrics, fams, b, level_name="L1", bucket_index=0,
+                           capacity_bits=1e6, mode="all_feasible")
+    assert bc.feasible
+    ranks = [c.pref_rank for c in bc.candidates]
+    assert ranks == sorted(ranks)                # preference-ordered
+    sram_only = SelectionPolicy(preference=("sram",))
+    bc2 = bucket_candidates(metrics, fams, b, level_name="L1", bucket_index=0,
+                            capacity_bits=1e6, policy=sram_only)
+    assert {c.family for c in bc2.candidates} == {"sram"}
+    lv = LevelReq("L2", 8 * 1024 * 1024, (b, Bucket(1.0, 2.9e9, 1e-4)))
+    per_bucket = level_candidates(metrics, fams, lv)
+    assert len(per_bucket) == 2
+    assert per_bucket[0].capacity_bits == pytest.approx(lv.capacity_bits)
+
+
+# ------------------------------------------------------------------ caching
+def test_compose_cache_skips_vmap_and_scoring(tmp_path):
+    t = gainsight.TASKS[2]
+    r1 = compose(None, t, cache=tmp_path)
+    n_chz, n_eval = api.characterize_call_count(), composition_eval_count()
+    r2 = compose(None, t, cache=tmp_path)
+    assert api.characterize_call_count() == n_chz, \
+        "compose() cache hit must not re-run the vmap characterization"
+    assert composition_eval_count() == n_eval, \
+        "compose() cache hit must not re-run the batched scoring"
+    assert r2.labels() == r1.labels() == gainsight.TABLE2_EXPECTED[3]
+    assert [c.labels() for c in r2.ranked] == [c.labels() for c in r1.ranked]
+    for m in SYSTEM_METRICS:
+        assert r2.best.metrics[m] == pytest.approx(r1.best.metrics[m])
+    assert (r2.n_compositions, r2.n_feasible) == (r1.n_compositions,
+                                                 r1.n_feasible)
+    # a different policy is a different cache entry, not a false hit
+    r3 = compose(None, t, cache=tmp_path,
+                 compose_policy=ComposePolicy(objective="area"))
+    assert composition_eval_count() == n_eval + 1
+
+
+# -------------------------------------------------- objectives and budgets
+def test_objectives_and_budgets(table):
+    t = gainsight.TASKS[0]
+    pref = compose(table, t)
+    area = compose(table, t, compose_policy=ComposePolicy(objective="area"))
+    power = compose(table, t, compose_policy=ComposePolicy(objective="power"))
+    assert area.best.metrics["area_um2"] <= pref.best.metrics["area_um2"]
+    assert power.best.metrics["p_w"] <= pref.best.metrics["p_w"]
+    # a budget below the TRUE min-area design (all_feasible optimum — the
+    # budget pin puts that composition in every grid) leaves nothing feasible
+    true_min = compose(table, t, compose_policy=ComposePolicy(
+        objective="area",
+        candidate_mode="all_feasible")).best.metrics["area_um2"]
+    rb = compose(table, t, compose_policy=ComposePolicy(
+        objective="area", area_budget_um2=0.99 * true_min))
+    assert rb.n_feasible == 0 and not rb.best.feasible
+    with pytest.raises(ValueError):
+        ComposePolicy(objective="nosuch")
+
+
+def test_all_feasible_optimum_never_worse_than_greedy_reps(table):
+    """Objective-aware candidate ordering: caps/trimming must not discard
+    the rows a power/area objective is looking for, so the all_feasible
+    optimum is always <= the per_family_best one (its candidate superset)."""
+    for t in (gainsight.TASKS[0], gainsight.TASKS[6]):
+        for objective, metric in (("power", "p_w"), ("area", "area_um2")):
+            reps = compose(table, t,
+                           compose_policy=ComposePolicy(objective=objective))
+            full = compose(table, t, compose_policy=ComposePolicy(
+                objective=objective, candidate_mode="all_feasible"))
+            assert full.best.metrics[metric] <= \
+                reps.best.metrics[metric] * (1 + 1e-6), (t.task_id, objective)
+
+
+def test_tight_candidate_cap_keeps_the_optimum(table):
+    """Candidates are ordered by TILED slot contribution, so an unbudgeted
+    power/area optimum survives even a cap of 2 per bucket (raw per-macro
+    metrics would put the optimum near the tail — a big macro tiles fewer
+    times — and a cap would silently return a several-x-worse design)."""
+    for objective, metric in (("power", "p_w"), ("area", "area_um2"),
+                              ("balanced", "area_um2")):
+        wide = compose(table, gainsight.TASKS[0], compose_policy=ComposePolicy(
+            objective=objective, candidate_mode="all_feasible",
+            max_candidates_per_bucket=64))
+        tight = compose(table, gainsight.TASKS[0],
+                        compose_policy=ComposePolicy(
+                            objective=objective,
+                            candidate_mode="all_feasible",
+                            max_candidates_per_bucket=2))
+        if objective == "balanced":      # heuristic ordering: no worse than 5%
+            assert tight.best.metrics[metric] <= \
+                wide.best.metrics[metric] * 1.05
+        else:                            # decomposable: cap must be lossless
+            assert tight.best.metrics[metric] == pytest.approx(
+                wide.best.metrics[metric], rel=1e-9), objective
+
+
+def test_budget_survives_objective_ordered_caps(table):
+    """An area budget just above the min achievable area must stay feasible
+    under objective="power" even with a tight per-bucket cap: budgets pin
+    their per-slot argmin rows into the grid, so 'nothing fits' can never be
+    a cap artifact."""
+    t = gainsight.TASKS[0]
+    min_area = compose(table, t, compose_policy=ComposePolicy(
+        objective="area", candidate_mode="all_feasible")).best.metrics[
+        "area_um2"]
+    rep = compose(table, t, compose_policy=ComposePolicy(
+        objective="power", candidate_mode="all_feasible",
+        max_candidates_per_bucket=4, area_budget_um2=1.001 * min_area))
+    assert rep.n_feasible > 0 and rep.best.feasible
+    assert rep.best.metrics["area_um2"] <= 1.001 * min_area
+    # per-bucket caps now surface as a non-exhaustive-grid signal
+    assert rep.truncated
+    # grid trimming (max_compositions) must not drop the pinned rows either
+    trim = compose(table, t, compose_policy=ComposePolicy(
+        objective="power", candidate_mode="all_feasible",
+        max_compositions=8, area_budget_um2=1.001 * min_area))
+    assert trim.n_feasible > 0 and trim.best.feasible
+    # ...and the guarantee holds in the default per_family_best mode too,
+    # where the min-area row is usually not a greedy family representative
+    reps = compose(table, t, compose_policy=ComposePolicy(
+        area_budget_um2=1.001 * min_area))
+    assert reps.n_feasible > 0 and reps.best.feasible
+
+
+def test_all_feasible_mode_and_truncation(table):
+    t = gainsight.TASKS[2]
+    big = compose(table, t, compose_policy=ComposePolicy(
+        candidate_mode="all_feasible", max_candidates_per_bucket=12))
+    small = compose(table, t)
+    assert big.n_compositions > small.n_compositions
+    # same winner: extra candidates are all worse under the default objective
+    assert big.labels() == small.labels()
+    trunc = compose(table, t, compose_policy=ComposePolicy(
+        candidate_mode="all_feasible", max_candidates_per_bucket=30,
+        max_compositions=100))
+    assert trunc.n_compositions <= 100 and trunc.truncated
+
+
+def test_infeasible_bucket_gets_sentinel_label(table):
+    impossible = TaskReq("x", "impossible", {
+        "L1": LevelReq("L1", 8 * 1024, (Bucket(1.0, 1e13, 1e3),))})
+    rep = compose(table, impossible)
+    assert rep.labels() == {"L1": "infeasible"}
+    assert not rep.best.feasible and rep.n_feasible == 0
+    with pytest.raises(LookupError):
+        rep.pick_macro("L1", 0)
+
+
+# ----------------------------------------------------------------- sharding
+def test_sharded_scoring_matches_inprocess(table):
+    """sharded=True on the current host (any device count) must be exact."""
+    if jax.device_count() == 1:
+        pytest.skip("1-device host: in-process sharding is a bypass; "
+                    "the subprocess test covers the real path")
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, len(table), size=(257, 4)).astype(np.int32)
+    cap, f = [1e5, 2e5, 4e5, 1e6], [1e9, 5e8, 2e9, 1e9]
+    a = score_grid(table.metrics, idx, cap, f, sharded=False)
+    b = score_grid(table.metrics, idx, cap, f, sharded=True)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+_SHARDED_EQUIV_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import numpy as np, jax
+sys.path.insert(0, "src")
+assert jax.device_count() == 8
+from repro.api import DesignTable, design_space
+from repro.core import gainsight
+from repro.hetero import compose
+from repro.hetero.system import score_grid
+
+table = DesignTable.from_configs(design_space())
+rng = np.random.default_rng(0)
+idx = rng.integers(0, len(table), size=(1003, 4)).astype(np.int32)
+cap, f = [1e5, 2e5, 4e5, 1e6], [1e9, 5e8, 2e9, 1e9]
+a = score_grid(table.metrics, idx, cap, f, sharded=False)
+b = score_grid(table.metrics, idx, cap, f, sharded=True)
+exact = all(bool(np.array_equal(a[k], b[k])) for k in a)
+r0 = compose(table, gainsight.TASKS[6], sharded=False)
+r1 = compose(table, gainsight.TASKS[6], sharded=True)
+print(json.dumps({"exact": exact, "labels_equal": r0.labels() == r1.labels(),
+                  "table2": r1.labels() ==
+                  gainsight.TABLE2_EXPECTED[7]}))
+"""
+
+
+def test_sharded_equals_single_device_8dev(tmp_path):
+    """8-virtual-device shard_map scoring == single device, bit exact
+    (subprocess: the device count must be set before jax initializes)."""
+    script = tmp_path / "sharded_equiv.py"
+    script.write_text(_SHARDED_EQUIV_SCRIPT)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, str(script)], capture_output=True,
+                         text=True,
+                         cwd=str(Path(__file__).resolve().parents[1]),
+                         env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res == {"exact": True, "labels_equal": True, "table2": True}
+
+
+# ---------------------------------------------------------------- internals
+def test_tiles_for_matches_kernel(table):
+    idx = np.array([[0, 5], [-1, 7]], np.int32)
+    cap = np.array([1e6, 3e5])
+    tiles = tiles_for(table.metrics, idx, cap)
+    bits = np.asarray(table.metrics["bits"])
+    assert tiles[0, 0] == int(np.ceil(1e6 / bits[0]))
+    assert tiles[1, 0] == 0                       # sentinel slot: no tiles
+    assert tiles[1, 1] == int(np.ceil(3e5 / bits[7]))
