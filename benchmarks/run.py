@@ -62,14 +62,20 @@ def main() -> None:
     from repro.core import gainsight
     from repro.hetero import compose
 
-    def compose_all():
-        reports = [compose(table, t) for t in gainsight.TASKS]
+    def compose_all(refine=None):
+        reports = [compose(table, t, refine=refine) for t in gainsight.TASKS]
         return reports, sum(r.matches(gainsight.TABLE2_EXPECTED[r.task.task_id])
                             for r in reports)
 
     (_, n_match), us = _timed(compose_all)
     print(f"hetero_compose,{us:.0f},\"joint (L1,L2) composition for 7 tasks; "
           f"Table 2 matches {n_match}/7\"")
+
+    # trace replay + simulated re-rank (full record: python -m benchmarks.sim_replay)
+    (_, n_sim_match), us = _timed(lambda: compose_all(refine="simulate"))
+    print(f"sim_replay,{us:.0f},\"simulate-then-rerank for 7 tasks "
+          f"(prefill+decode traces, top-8 re-rank); Table 2 matches "
+          f"{n_sim_match}/7\"")
 
     # per-arch heterogeneous-memory DSE (the paper's technique on our archs)
     try:

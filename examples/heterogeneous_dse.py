@@ -32,6 +32,19 @@ def main():
     print("\n== composition report, task 7 (3-technology L2) ==")
     print(reports[7].summary())
 
+    print("\n== simulate-then-rerank: replay phase traces vs the averages ==")
+    rep_sim = compiler.simulate(gainsight.TASKS[6], space=table,
+                                cache="artifacts/dse_cache")
+    m = rep_sim.best.metrics
+    print(f"  winner unchanged at defaults: {rep_sim.labels()}")
+    print(f"  replayed (prefill+decode):  E={m['sim_e_total_j'] * 1e6:.3f} uJ"
+          f"  t={m['sim_t_sim_s'] * 1e3:.3f} ms"
+          f"  stall={m['sim_stall_frac']:.1%}"
+          f"  util_peak={m['sim_util_peak']:.3f}")
+    runner = rep_sim.ranked[1].metrics
+    print(f"  runner-up after re-rank:    E={runner['sim_e_total_j'] * 1e6:.3f} uJ"
+          f"  (analytic p_w {runner['p_w'] * 1e3:.3f} mW)")
+
     print("\n== joint tradeoff: same task under a power-first objective ==")
     rep_p = compiler.compose(
         gainsight.TASKS[6], space=table,

@@ -14,6 +14,7 @@ _API_NAMES = (
     "DesignTable", "design_space",
     "explore", "DSEReport",
     "compose", "ComposePolicy", "CompositionReport",
+    "simulate", "SimPolicy",
     "gradient_size_macro", "characterize_call_count",
 )
 

@@ -63,6 +63,7 @@ from repro.core.select import (  # noqa: F401  (re-exported façade names)
 from repro.hetero.compose import (  # noqa: F401  (re-exported façade names)
     ComposePolicy, CompositionReport, compose,
 )
+from repro.sim.engine import SimPolicy  # noqa: F401  (re-exported façade name)
 
 __all__ = [
     "Bucket", "LevelReq", "TaskReq", "SelectionPolicy",
@@ -70,6 +71,7 @@ __all__ = [
     "DesignTable", "design_space",
     "explore", "DSEReport",
     "compose", "ComposePolicy", "CompositionReport",
+    "simulate", "SimPolicy",
     "gradient_size_macro", "characterize_call_count",
 ]
 
@@ -487,7 +489,8 @@ class Compiler:
     def compose(self, task, space: SpaceLike = None,
                 policy: Optional[SelectionPolicy] = None,
                 compose_policy=None, cache: Union[None, str, Path] = None,
-                sharded: bool = False):
+                sharded: bool = False, refine: Optional[str] = None,
+                sim_policy=None):
         """Joint heterogeneous composition for one task -> CompositionReport.
 
         Where ``explore`` picks each cache level independently, ``compose``
@@ -503,12 +506,42 @@ class Compiler:
                     calls skip both the vmap characterization and the
                     composition scoring.
         ``sharded`` spread the composition grid across all visible devices.
+        ``refine``  ``"simulate"`` re-ranks the analytic top-K by trace
+                    replay (see ``Compiler.simulate``).
         """
         if space is None:
             space = self.design_space()
         return compose(space=space, task=task, policy=policy,
                        compose_policy=compose_policy, cache=cache,
-                       sharded=sharded)
+                       sharded=sharded, refine=refine, sim_policy=sim_policy)
+
+    def simulate(self, task, space: SpaceLike = None,
+                 policy: Optional[SelectionPolicy] = None,
+                 compose_policy=None, sim_policy=None,
+                 cache: Union[None, str, Path] = None,
+                 sharded: bool = False):
+        """Simulate-then-rerank DSE for one task -> CompositionReport.
+
+        Prunes the composition grid analytically (``compose``) to the
+        ``ComposePolicy.top_k`` leaders, replays the task's time-binned
+        phase traces against them — per-bank refresh/access collisions,
+        dynamic access energy, retention-expiry rewrites, occupancy
+        (``repro.sim``) — and re-ranks by simulated energy/latency. The
+        returned report has ``refined == "simulate"`` and each
+        composition's ``metrics`` carries the ``sim_*`` keys
+        (``sim_e_total_j`` [J], ``sim_t_sim_s`` [s], ``sim_stall_frac``,
+        ``sim_collisions``, ...).
+
+        ``sim_policy`` is a ``repro.api.SimPolicy`` (phases, bins, window,
+        refresh scheduling, re-rank objective); ``cache`` additionally
+        stores the simulated report as ``sim_<key>.npz`` beside the hetero
+        cache, so a repeat call re-runs neither the characterization, the
+        analytic scoring, nor the trace replay.
+        """
+        return self.compose(task, space=space, policy=policy,
+                            compose_policy=compose_policy, cache=cache,
+                            sharded=sharded, refine="simulate",
+                            sim_policy=sim_policy)
 
     def gradient_size(self, config: MacroConfig, **kw) -> Dict[str, float]:
         """Beyond-paper continuous device sizing (see gradient_size_macro)."""
@@ -600,6 +633,23 @@ def explore(space: SpaceLike = None, tasks=None,
             for lvl, req in t.levels.items()}
     return DSEReport(table=table, tasks=task_reqs, policy=policy,
                      selections=selections)
+
+
+def simulate(space: SpaceLike = None, task=None,
+             policy: Optional[SelectionPolicy] = None,
+             compose_policy=None, sim_policy=None,
+             cache: Union[None, str, Path] = None,
+             sharded: bool = False) -> CompositionReport:
+    """Simulate-then-rerank DSE: ``compose(refine="simulate")``.
+
+    Analytic top-K prune, then trace replay (``repro.sim``) re-ranks the
+    leaders by simulated energy/latency — see ``Compiler.simulate`` for the
+    full contract. Module-level twin of the method, mirroring
+    ``explore``/``compose``.
+    """
+    return compose(space=space, task=task, policy=policy,
+                   compose_policy=compose_policy, cache=cache,
+                   sharded=sharded, refine="simulate", sim_policy=sim_policy)
 
 
 # ---------------------------------------------------------------------------

@@ -11,13 +11,17 @@ The pure-jnp scan here is the oracle for the Pallas kernel in
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import bitcells, devices, tech
 
 T_START, T_END, PTS_PER_DECADE = 1e-9, 1e7, 30
-N_STEPS = int(PTS_PER_DECADE * (jnp.log10(T_END) - jnp.log10(T_START)))  # 480
+# plain math, not jnp: computing this with jnp.log10 dispatched device work
+# (and possibly platform init) at import time for a compile-time constant
+N_STEPS = int(PTS_PER_DECADE * (math.log10(T_END) - math.log10(T_START)))  # 480
 
 
 def time_grid():

@@ -136,6 +136,10 @@ class CompositionReport:
     n_compositions: int
     n_feasible: int
     truncated: bool = False
+    # set to "simulate" by the repro.sim re-rank: ``ranked`` is then ordered
+    # by trace-replayed energy/latency and every composition's ``metrics``
+    # carries the ``sim_*`` keys
+    refined: Optional[str] = None
 
     @property
     def best(self) -> Composition:
@@ -288,7 +292,9 @@ def _materialize(table, task: TaskReq, idx_row: np.ndarray,
 
 def compose(space=None, task=None, policy: Optional[SelectionPolicy] = None,
             compose_policy: Optional[ComposePolicy] = None,
-            cache=None, sharded: bool = False) -> CompositionReport:
+            cache=None, sharded: bool = False,
+            refine: Optional[str] = None,
+            sim_policy=None) -> CompositionReport:
     """Joint heterogeneous composition for one task.
 
     ``space``   MacroConfig list, a built ``DesignTable``, or None for the
@@ -304,8 +310,16 @@ def compose(space=None, task=None, policy: Optional[SelectionPolicy] = None,
                 characterization nor the batched scoring.
     ``sharded`` split the composition grid across every visible device
                 (identical results; throughput only).
+    ``refine``  ``"simulate"`` prunes analytically to the policy's ``top_k``
+                and re-ranks those leaders by trace-replayed energy/latency
+                (``repro.sim``); the simulated report caches beside the
+                analytic one. ``sim_policy`` is a ``repro.sim.SimPolicy``
+                (phases, bins, refresh scheduling, re-rank objective).
     """
     from repro.api import DesignTable           # runtime: avoids module cycle
+    if refine not in (None, "simulate"):
+        raise ValueError(f"unknown refine mode {refine!r}; "
+                         f"valid: None, 'simulate'")
     if task is None:
         raise TypeError("compose() requires a task "
                         "(e.g. repro.core.gainsight.TASKS[0])")
@@ -314,11 +328,17 @@ def compose(space=None, task=None, policy: Optional[SelectionPolicy] = None,
     cp = compose_policy or ComposePolicy()
     table = DesignTable.build(space, cache=cache)
 
+    def _refine(report: CompositionReport) -> CompositionReport:
+        if refine != "simulate":
+            return report
+        from repro.sim.rerank import simulate_report   # runtime: no cycle
+        return simulate_report(report, sim_policy=sim_policy, cache=cache)
+
     if cache is not None:
         from repro.hetero import cache as cache_mod
         hit = cache_mod.load_report(cache, table, task, policy, cp)
         if hit is not None:
-            return hit
+            return _refine(hit)
 
     metrics = table.metrics
     fam_col = table.families
@@ -367,4 +387,4 @@ def compose(space=None, task=None, policy: Optional[SelectionPolicy] = None,
     if cache is not None:
         from repro.hetero import cache as cache_mod
         cache_mod.save_report(cache, report, idx[top])
-    return report
+    return _refine(report)

@@ -10,9 +10,10 @@ Every compute hot-spot registers up to three implementations:
 Selection order (``resolve_backend``):
 
   1. explicit ``backend=`` argument
-  2. ``REPRO_KERNEL_BACKEND`` env var ("tpu" / "interpret" / "xla")
-  3. legacy ``REPRO_PALLAS_INTERPRET=1`` (kept for existing launch scripts)
-  4. "tpu" when ``jax.default_backend()`` is a TPU, else "xla"
+  2. a ``use_backend(...)`` context override (innermost wins)
+  3. ``REPRO_KERNEL_BACKEND`` env var ("tpu" / "interpret" / "xla")
+  4. legacy ``REPRO_PALLAS_INTERPRET=1`` (kept for existing launch scripts)
+  5. "tpu" when ``jax.default_backend()`` is a TPU, else "xla"
 
 A resolved backend with no registered implementation falls back to "xla",
 so ops stay callable on CPU even when only the reference path exists.
@@ -20,6 +21,7 @@ so ops stay callable on CPU even when only the reference path exists.
 from __future__ import annotations
 
 import os
+from contextlib import contextmanager
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -30,6 +32,29 @@ _FALLBACK = {"tpu": ("tpu", "xla"),
              "xla": ("xla",)}
 
 _REGISTRY: Dict[str, Dict[str, Callable]] = {}
+
+# stack of use_backend() overrides (innermost last); beats the env vars but
+# not an explicit backend= argument
+_OVERRIDES: list = []
+
+
+@contextmanager
+def use_backend(backend: str):
+    """Force ``resolve_backend()`` to ``backend`` inside the block.
+
+    Tests and benchmarks use this to pin every dispatched op (e.g. the
+    simulator's interpret-vs-xla equivalence proof) without threading a
+    ``backend=`` argument through call stacks or mutating the process env.
+    Nested blocks: the innermost wins; an explicit ``backend=`` argument
+    still takes precedence.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; valid: {BACKENDS}")
+    _OVERRIDES.append(backend)
+    try:
+        yield
+    finally:
+        _OVERRIDES.pop()
 
 
 def register(name: str, **impls: Callable) -> None:
@@ -56,6 +81,8 @@ def resolve_backend(explicit: Optional[str] = None) -> str:
         if explicit not in BACKENDS:
             raise ValueError(f"unknown backend {explicit!r}; valid: {BACKENDS}")
         return explicit
+    if _OVERRIDES:
+        return _OVERRIDES[-1]
     env = os.environ.get("REPRO_KERNEL_BACKEND")
     if env:
         if env not in BACKENDS:

@@ -17,11 +17,16 @@ Tensor classes ("buckets" in DSE terms):
 from __future__ import annotations
 
 import json
+import warnings
 from pathlib import Path
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.configs import SHAPES, get_config
 from repro.core.select import Bucket, LevelReq, TaskReq
+
+# dry-run shape kind -> simulator phase envelope (repro.sim.trace.PHASES)
+_KIND_TO_PHASE = {"train": "train_step", "prefill": "prefill",
+                  "decode": "decode"}
 
 # TPU-v5e-like hardware constants (same as the roofline)
 PEAK_FLOPS = 197e12
@@ -104,24 +109,68 @@ def arch_task(arch: str, shape_name: str,
                    levels={"L1": reqs["L1"], "L2": reqs["L2"]})
 
 
-def available_arch_tasks(shapes: Sequence[str] = ("train_4k", "decode_32k"),
-                         archs: Optional[Sequence[str]] = None,
-                         mesh: str = "pod16x16",
-                         outdir: str = "artifacts/dryrun") -> List[TaskReq]:
+def available_arch_tasks(
+    shapes: Sequence[str] = ("train_4k", "decode_32k"),
+    archs: Optional[Sequence[str]] = None,
+    mesh: str = "pod16x16",
+    outdir: str = "artifacts/dryrun",
+    return_missing: bool = False,
+) -> Union[List[TaskReq], Tuple[List[TaskReq], List[Tuple[str, str]]]]:
     """Every (arch x shape) cell with a clean dry-run record, as TaskReqs.
 
     This is the profiler-side requirements source for the composition engine
     (the GainSight paper tasks in ``repro.core.gainsight`` are the other).
     ``mesh`` selects which dry-run mesh's records to read (``"pod2x16x16"``
     for ``--multi-pod`` runs). Fresh checkouts without ``artifacts/dryrun``
-    simply get an empty list, so callers degrade gracefully instead of
-    raising.
+    get an empty list so callers degrade gracefully instead of raising — but
+    never *silently*: when every requested cell is missing a
+    ``RuntimeWarning`` names the record directory and the generator command,
+    and ``return_missing=True`` returns ``(tasks, missing)`` where
+    ``missing`` lists the (arch, shape) cells that had no clean record.
     """
     from repro.configs import ALL_ARCHS
     tasks: List[TaskReq] = []
+    missing: List[Tuple[str, str]] = []
     for arch in (archs if archs is not None else ALL_ARCHS):
         for shape in shapes:
             rec = load_dryrun_record(arch, shape, mesh=mesh, outdir=outdir)
             if rec is not None:
                 tasks.append(arch_task(arch, shape, rec))
+            else:
+                missing.append((arch, shape))
+    if missing and not tasks:
+        warnings.warn(
+            f"no clean dry-run records under {outdir!r} for mesh {mesh!r} "
+            f"({len(missing)} (arch, shape) cells missing; generate them "
+            f"with `python -m repro.launch.dryrun --all`)",
+            RuntimeWarning, stacklevel=2)
+    if return_missing:
+        return tasks, missing
     return tasks
+
+
+def arch_traces(arch: str, shape_name: str, rec: Optional[dict] = None,
+                n_bins: int = 32, n_steps: int = 4, mesh: str = "pod16x16",
+                outdir: str = "artifacts/dryrun"):
+    """Dry-run-derived time-binned traces for one (arch x shape) cell.
+
+    The trace export of the profiler: the cell's requirements
+    (``arch_task``) are binned by ``repro.sim.trace`` with the phase
+    envelope matching the dry-run shape's kind (train -> train_step,
+    prefill/decode as themselves) over a window of ``n_steps`` compiled
+    step times — so the simulator replays the same roofline-derived step
+    the analytic requirements were priced from. ``mesh``/``outdir`` select
+    the record set like ``available_arch_tasks`` (``"pod2x16x16"`` for
+    ``--multi-pod`` runs). Returns a 1-tuple of ``repro.sim.trace.Trace``.
+    """
+    from repro.sim.trace import task_traces
+    rec = rec or load_dryrun_record(arch, shape_name, mesh=mesh,
+                                    outdir=outdir)
+    if rec is None:
+        raise FileNotFoundError(f"no dry-run record for {arch} {shape_name} "
+                                f"({mesh}) under {outdir}")
+    task = arch_task(arch, shape_name, rec)
+    phase = _KIND_TO_PHASE[SHAPES[shape_name].kind]
+    duration = max(step_time_estimate(rec), 1e-6) * n_steps
+    return task_traces(task, phases=(phase,), duration_s=duration,
+                       n_bins=n_bins)

@@ -1,0 +1,46 @@
+"""Trace-driven heterogeneous memory simulator (`repro.sim`).
+
+The analytic composition engine (``repro.hetero``) prices refresh and dynamic
+power as *steady-state averages* — it never replays a workload against a
+composed memory system over time, so phase-dependent effects are invisible to
+it: prefill fills a KV slot while decode only reads it back, refresh pulses
+collide with demand accesses at the bank ports, and data whose lifetime
+outruns a gain cell's retention must be rewritten. This subsystem is the
+time-resolved layer between the profiler and the compose engine:
+
+``trace``
+    converts a ``TaskReq`` (and, via ``repro.profiler.traffic.arch_traces``,
+    compiled dry-run records) into time-binned traffic traces per phase —
+    prefill / decode / train-step — with per-slot reads [accesses], written
+    bits, and live-capacity occupancy per bin.
+``refresh``
+    derives per-macro refresh intervals from the ``core.retention`` solver's
+    ``retention_s`` metric (interval = margin × retention) and the refresh
+    op rates the scheduler issues against them.
+``engine``
+    a batched ``jax.lax.scan`` over time bins that models per-bank
+    refresh/access port collisions, dynamic access energy, retention-expiry
+    rewrites, and occupancy — vmapped over the full (J compositions × S
+    slots) grid so thousands of candidate systems simulate in one call,
+    dispatched through the ``repro.kernels.backend`` registry (op
+    ``sim_replay``: "xla" vmapped scan, "interpret" per-composition loop).
+``rerank``
+    simulate-then-rerank DSE: prune analytically to top-K with
+    ``repro.hetero.compose``, replay the traces against the survivors, and
+    re-rank by simulated energy/latency (``compose(refine="simulate")`` /
+    ``Compiler.simulate``), with npz trace-report caching beside the hetero
+    cache.
+"""
+from repro.sim.engine import (SIM_METRICS, SimPolicy, sim_eval_count,
+                              simulate_traces)
+from repro.sim.refresh import (DEFAULT_REFRESH_MARGIN, refresh_interval_s,
+                               refresh_intervals)
+from repro.sim.rerank import simulate_report
+from repro.sim.trace import PHASES, Trace, phase_trace, task_traces
+
+__all__ = [
+    "PHASES", "Trace", "phase_trace", "task_traces",
+    "DEFAULT_REFRESH_MARGIN", "refresh_interval_s", "refresh_intervals",
+    "SIM_METRICS", "SimPolicy", "simulate_traces", "sim_eval_count",
+    "simulate_report",
+]

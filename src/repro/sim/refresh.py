@@ -1,0 +1,62 @@
+"""Refresh scheduling rules derived from the retention solver.
+
+The analytic model prices refresh as a steady-state average power
+(``characterize``'s ``p_refresh_w = (e_read + e_write) * num_words /
+retention_s``). The simulator instead *schedules* refresh: every stored word
+is rewritten once per refresh interval, where the interval comes straight
+from the ``core.retention`` transient solver's ``retention_s`` metric scaled
+by a safety margin —
+
+    interval_s = DEFAULT_REFRESH_MARGIN × retention_s
+
+(refresh before the stored '1' droops to the read-margin threshold, not at
+it). The issued op rate is occupancy-aware — only live words refresh — and
+the ops compete with demand accesses at the bank ports, which is where the
+collision behavior the steady-state average cannot see comes from.
+
+All functions are plain arithmetic on arrays and work on numpy and jnp
+inputs alike (the engine calls them under jit).
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import numpy as np
+
+# refresh at 80% of the solver's retention time (guard band before the
+# read-margin crossing); SRAM rows carry retention_s = 1e12 s, so their
+# interval is effectively infinite and the scheduler never fires for them
+DEFAULT_REFRESH_MARGIN = 0.8
+
+
+def refresh_interval_s(retention_s, margin: float = DEFAULT_REFRESH_MARGIN):
+    """Scheduled refresh interval [s] for a macro with ``retention_s`` [s].
+
+    Elementwise; works on scalars, numpy, and jnp arrays."""
+    return margin * retention_s
+
+
+def refresh_intervals(metrics: Mapping[str, np.ndarray],
+                      margin: float = DEFAULT_REFRESH_MARGIN) -> np.ndarray:
+    """Per-row refresh intervals [s] for a DesignTable metric dict — the
+    solver parity anchor: ``refresh_intervals(table.metrics) ==
+    margin * table.metrics["retention_s"]`` by construction."""
+    return refresh_interval_s(
+        np.asarray(metrics["retention_s"], np.float64), margin)
+
+
+def refresh_ops(num_words, interval_s, occupancy, t_bin_s):
+    """Refresh operations issued in one bin: every live word once per
+    interval — ``occupancy × num_words × t_bin / interval`` [ops].
+
+    Elementwise (jnp-safe); the engine multiplies by the slot's tile count
+    and masks slots whose macro retention already covers the data lifetime
+    (no refresh needed when data expires before the cell droops)."""
+    return occupancy * num_words * t_bin_s / interval_s
+
+
+def needs_refresh(retention_s, lifetime_s):
+    """True where stored data must outlive the cell's retention — the slots
+    the scheduler (or, with refresh disabled, the expiry-rewrite path)
+    fires for. Elementwise (jnp-safe)."""
+    return retention_s < lifetime_s

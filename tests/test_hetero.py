@@ -134,6 +134,29 @@ def test_compose_cache_skips_vmap_and_scoring(tmp_path):
     assert composition_eval_count() == n_eval + 1
 
 
+def test_cache_key_sensitivity(table, tmp_path):
+    """The report key must separate tasks and both policies: identical
+    re-calls hit, any change misses — proven by the scoring counter."""
+    t_a, t_b = gainsight.TASKS[0], gainsight.TASKS[4]
+    compose(table, t_a, cache=tmp_path)
+    n = composition_eval_count()
+    compose(table, t_a, cache=tmp_path)                  # identical: hit
+    assert composition_eval_count() == n
+    compose(table, t_b, cache=tmp_path)                  # task change: miss
+    assert composition_eval_count() == n + 1
+    compose(table, t_a, cache=tmp_path,                  # SelectionPolicy
+            policy=SelectionPolicy(allow_refresh=True))  # change: miss
+    assert composition_eval_count() == n + 2
+    compose(table, t_a, cache=tmp_path,                  # ComposePolicy
+            compose_policy=ComposePolicy(top_k=3))       # change: miss
+    assert composition_eval_count() == n + 3
+    # and every variant now hits again without re-scoring
+    compose(table, t_b, cache=tmp_path)
+    compose(table, t_a, cache=tmp_path,
+            policy=SelectionPolicy(allow_refresh=True))
+    assert composition_eval_count() == n + 3
+
+
 # -------------------------------------------------- objectives and budgets
 def test_objectives_and_budgets(table):
     t = gainsight.TASKS[0]

@@ -1,0 +1,341 @@
+"""The repro.sim trace-replay simulator: trace construction arithmetic,
+refresh-interval parity with the retention solver, collision / expiry-rewrite
+arithmetic against closed forms, vmapped-grid bit-exactness vs a
+per-composition Python loop, simulate-then-rerank DSE (Table-2 parity,
+top-K containment), sim-report caching, and the profiler trace export."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import Compiler, DesignTable, SimPolicy, design_space, simulate
+from repro.core import bitcells, gainsight, retention
+from repro.core.select import Bucket, LevelReq, TaskReq
+from repro.hetero import compose, composition_eval_count
+from repro.kernels import backend as kbackend
+from repro.sim import (DEFAULT_REFRESH_MARGIN, refresh_intervals,
+                       sim_eval_count, simulate_traces, task_traces)
+from repro.sim.engine import SIM_METRICS
+from repro.sim.rerank import composition_idx, sim_cols
+from repro.sim.trace import phase_trace
+
+
+@pytest.fixture(scope="module")
+def table():
+    return DesignTable.from_configs(design_space())
+
+
+def _toy_cols(retention_s=1e-4, bits=1024.0, word_bits=32.0, e_read=1e-12,
+              e_write=2e-12, f_op=1e9, p_leak=1e-6):
+    return {k: np.array([v], np.float64) for k, v in [
+        ("bits", bits), ("word_bits", word_bits), ("e_read_j", e_read),
+        ("e_write_j", e_write), ("f_op_hz", f_op), ("p_leak_w", p_leak),
+        ("retention_s", retention_s)]}
+
+
+def _one_slot_task(cap_bits=1024, f_hz=1e8, lifetime_s=1e-3):
+    return TaskReq("toy", "toy", {
+        "L1": LevelReq("L1", cap_bits, (Bucket(1.0, f_hz, lifetime_s),))})
+
+
+# ------------------------------------------------------------------- refresh
+def test_refresh_interval_parity_with_retention_solver(table):
+    """Intervals are margin x the SAME retention the transient solver puts in
+    the table — elementwise over the grid and directly vs the solver."""
+    iv = refresh_intervals(table.metrics)
+    np.testing.assert_allclose(
+        iv,
+        DEFAULT_REFRESH_MARGIN * np.asarray(table["retention_s"], np.float64),
+        rtol=0, atol=0)
+    rows = np.where((table["mem_type"] == "gc_sisi")
+                    & ~table["level_shift"])[0]
+    t_solver = float(retention.retention_time(bitcells.BITCELLS["gc_sisi"], 0))
+    np.testing.assert_allclose(iv[rows],
+                               DEFAULT_REFRESH_MARGIN * t_solver, rtol=1e-6)
+
+
+def test_retention_grid_constant_is_static():
+    """N_STEPS must stay a plain int computed without device work at import
+    time (math.log10, not jnp) — and keep its historical value."""
+    assert isinstance(retention.N_STEPS, int)
+    assert retention.N_STEPS == 480
+    assert retention.time_grid().shape[0] == retention.N_STEPS + 1
+
+
+# -------------------------------------------------------------------- traces
+def test_trace_read_volume_matches_requirement():
+    """Every phase integrates each slot's reads to f_hz * duration — the
+    envelopes shape traffic in time, never change its volume."""
+    t = gainsight.TASKS[2]
+    for phase in ("prefill", "decode", "train_step"):
+        tr = phase_trace(t, phase, duration_s=2e-3, n_bins=48)
+        np.testing.assert_allclose(tr.reads.sum(axis=1),
+                                   tr.f_req_hz * tr.duration_s, rtol=1e-9)
+
+
+def test_trace_phase_envelopes():
+    task = TaskReq("t", "t", {"L2": LevelReq("L2", 1 << 20, (
+        Bucket(0.5, 1e9, 1e-6),        # short-lived (activations)
+        Bucket(0.5, 1e9, 10.0)))})     # long-lived  (KV / weights)
+    pre = phase_trace(task, "prefill", duration_s=1e-3, n_bins=16)
+    dec = phase_trace(task, "decode", duration_s=1e-3, n_bins=16)
+    trn = phase_trace(task, "train_step", duration_s=1e-3, n_bins=16)
+    # prefill: the long-lived slot fills monotonically; short-lived is flat
+    assert np.all(np.diff(pre.occupancy[1]) > 0)
+    assert pre.occupancy[1][0] < 0.1 and pre.occupancy[1][-1] > 0.9
+    np.testing.assert_allclose(pre.occupancy[0], 1.0)
+    # decode: steady state everywhere
+    np.testing.assert_allclose(dec.occupancy, 1.0)
+    np.testing.assert_allclose(
+        dec.reads, np.broadcast_to(dec.reads[:, :1], dec.reads.shape))
+    # train-step: residuals triangle up (forward) then down (backward)
+    peak = int(np.argmax(trn.occupancy[0]))
+    assert 0 < peak < trn.n_bins - 1
+    assert np.all(np.diff(trn.occupancy[0][:peak]) > 0)
+    assert np.all(np.diff(trn.occupancy[0][peak + 1:]) < 0)
+    # backward reads heavier than forward for the residual slot
+    assert trn.reads[0][-1] > trn.reads[0][0]
+    with pytest.raises(ValueError):
+        phase_trace(task, "nosuch")
+
+
+def test_trace_write_turnover_arithmetic():
+    """Decode, flat occupancy: writes are exactly the line-turnover model
+    occ * cap * t_bin / lifetime, no phantom first-bin fill."""
+    task = _one_slot_task(cap_bits=4096, f_hz=1e8, lifetime_s=5e-4)
+    tr = phase_trace(task, "decode", duration_s=1e-3, n_bins=8)
+    expect = 1.0 * 4096 * (1e-3 / 8) / 5e-4
+    np.testing.assert_allclose(tr.write_bits, expect, rtol=1e-12)
+
+
+# -------------------------------------------------------- engine arithmetic
+def test_collision_and_stall_arithmetic():
+    """One slot, one bin, refresh scheduled: recompute ops, utilization,
+    stall, collisions, and every energy term by hand."""
+    d, life, ret = 1e-3, 1e-2, 1e-4
+    cols = _toy_cols(retention_s=ret)
+    task = _one_slot_task(cap_bits=1024, f_hz=2e12, lifetime_s=life)
+    tr = phase_trace(task, "decode", duration_s=d, n_bins=1)
+    out = simulate_traces(cols, np.array([[0]], np.int32), [tr],
+                          policy=SimPolicy(refresh=True), backend="xla")
+    reads = 2e12 * d
+    wops = (1024 * d / life) / 32.0
+    nw, interval = 1024 / 32.0, DEFAULT_REFRESH_MARGIN * ret
+    refr = 1.0 * nw * d / interval            # tiles=1, occupancy=1
+    cap_ops = 1e9 * d
+    util = (reads + wops + refr) / cap_ops
+    assert util > 1.0                          # the port genuinely saturates
+    t_sim = d * util
+    assert out["util_peak"][0] == pytest.approx(util, rel=1e-5)
+    assert out["t_sim_s"][0] == pytest.approx(t_sim, rel=1e-5)
+    assert out["stall_frac"][0] == pytest.approx(util - 1.0, rel=1e-4)
+    assert out["collisions"][0] == pytest.approx(
+        refr * min((reads + wops) / cap_ops, 1.0), rel=1e-5)
+    assert out["e_dyn_j"][0] == pytest.approx(reads * 1e-12 + wops * 2e-12,
+                                              rel=1e-5)
+    assert out["e_refresh_j"][0] == pytest.approx(refr * 3e-12, rel=1e-5)
+    assert out["e_rewrite_j"][0] == 0.0
+    assert out["e_leak_j"][0] == pytest.approx(1e-6 * t_sim, rel=1e-5)
+    assert out["e_total_j"][0] == pytest.approx(
+        out["e_dyn_j"][0] + out["e_refresh_j"][0] + out["e_leak_j"][0],
+        rel=1e-6)
+
+
+def test_expiry_rewrite_arithmetic():
+    """Refresh disabled, retention < lifetime: data decays at 1/retention and
+    pays overhead-weighted rewrite energy instead of refresh energy."""
+    d, life, ret, ovh = 1e-3, 1e-2, 1e-4, 2.0
+    cols = _toy_cols(retention_s=ret)
+    task = _one_slot_task(cap_bits=1024, f_hz=1e6, lifetime_s=life)
+    tr = phase_trace(task, "decode", duration_s=d, n_bins=4)
+    out = simulate_traces(cols, np.array([[0]], np.int32), [tr],
+                          policy=SimPolicy(refresh=False,
+                                           rewrite_overhead=ovh))
+    rewr_ops = 1.0 * 1024 * d / ret / 32.0
+    assert out["e_rewrite_j"][0] == pytest.approx(rewr_ops * 2e-12 * ovh,
+                                                  rel=1e-5)
+    assert out["e_refresh_j"][0] == 0.0
+
+
+def test_refresh_gates_on_retention_vs_lifetime():
+    """Retention >= lifetime (the analytic no-refresh feasibility region):
+    neither refresh nor rewrites fire, under either scheduling mode."""
+    task = _one_slot_task(lifetime_s=1e-5)
+    tr = phase_trace(task, "decode", duration_s=1e-3, n_bins=2)
+    cols = _toy_cols(retention_s=1e-3)        # outlives the data
+    for refresh in (True, False):
+        out = simulate_traces(cols, np.array([[0]], np.int32), [tr],
+                              policy=SimPolicy(refresh=refresh))
+        assert out["e_refresh_j"][0] == 0.0
+        assert out["e_rewrite_j"][0] == 0.0
+        assert out["collisions"][0] == 0.0
+
+
+def test_vmapped_grid_bit_exact_vs_python_loop(table):
+    """The jit(vmap(scan)) grid path must equal the per-composition Python
+    loop over the same scan, bit for bit, across all phases."""
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, len(table), size=(41, 4)).astype(np.int32)
+    idx[5, 2] = -1
+    task = TaskReq("x", "x", {
+        "L1": LevelReq("L1", 1 << 20, (Bucket(0.6, 1.2e9, 2e-6),
+                                       Bucket(0.4, 5e8, 1e-4))),
+        "L2": LevelReq("L2", 64 << 20, (Bucket(0.5, 1e9, 1e-3),
+                                        Bucket(0.5, 2e9, 3e-6)))})
+    traces = task_traces(task, phases=("prefill", "decode", "train_step"))
+    cols = sim_cols(table)
+    a = simulate_traces(cols, idx, traces, backend="xla")
+    b = simulate_traces(cols, idx, traces, backend="interpret")
+    for m in SIM_METRICS:
+        np.testing.assert_array_equal(a[m], b[m], err_msg=m)
+    for phase in a["phases"]:
+        for m in SIM_METRICS:
+            np.testing.assert_array_equal(a["phases"][phase][m],
+                                          b["phases"][phase][m],
+                                          err_msg=f"{phase}/{m}")
+
+
+def test_sentinel_slot_prices_inf(table):
+    task = _one_slot_task()
+    tr = phase_trace(task, "decode")
+    out = simulate_traces(sim_cols(table),
+                          np.array([[0], [-1]], np.int32), [tr])
+    assert np.isfinite(out["e_total_j"][0])
+    assert np.isinf(out["e_total_j"][1]) and np.isinf(out["t_sim_s"][1])
+    assert out["collisions"][1] == 0.0
+    # the per-phase breakdown honors the same sentinel contract
+    assert np.isinf(out["phases"]["decode"]["e_total_j"][1])
+    assert np.isfinite(out["phases"]["decode"]["e_total_j"][0])
+
+
+def test_use_backend_context_overrides_env():
+    assert kbackend.resolve_backend("interpret") == "interpret"
+    with kbackend.use_backend("interpret"):
+        assert kbackend.resolve_backend() == "interpret"
+        with kbackend.use_backend("xla"):
+            assert kbackend.resolve_backend() == "xla"
+        assert kbackend.resolve_backend() == "interpret"
+        # an explicit argument still wins over the context
+        assert kbackend.resolve_backend("xla") == "xla"
+    with pytest.raises(ValueError):
+        with kbackend.use_backend("nosuch"):
+            pass
+
+
+# ------------------------------------------------------- simulate-then-rerank
+def test_refine_simulate_reproduces_table2(table):
+    """Acceptance: the simulated re-rank must not overturn the analytic
+    Table-2 winners at default settings — 7/7 through refine="simulate"."""
+    c = Compiler()
+    for t in gainsight.TASKS:
+        rep = c.simulate(t, space=table)
+        assert rep.refined == "simulate"
+        assert rep.labels() == gainsight.TABLE2_EXPECTED[t.task_id], t.task_id
+    assert sum(c.simulate(t, space=table).matches(
+        gainsight.TABLE2_EXPECTED[t.task_id]) for t in gainsight.TASKS) == 7
+
+
+def test_rerank_topk_containment(table):
+    """The re-rank permutes the analytic top-K — same composition set, no
+    additions, no drops — and stamps sim_* metrics on every entry."""
+    t = gainsight.TASKS[6]
+    analytic = compose(table, t)
+    refined = compose(table, t, refine="simulate")
+    assert len(refined.ranked) == len(analytic.ranked)
+    key_rows = {tuple(r) for r in composition_idx(analytic)}
+    assert {tuple(r) for r in composition_idx(refined)} == key_rows
+    for comp in refined.ranked:
+        for m in SIM_METRICS:
+            assert f"sim_{m}" in comp.metrics
+    assert (refined.n_compositions, refined.n_feasible) == \
+        (analytic.n_compositions, analytic.n_feasible)
+    with pytest.raises(ValueError):
+        compose(table, t, refine="nosuch")
+
+
+def test_simulate_facade_and_policy_validation(table):
+    rep = simulate(table, gainsight.TASKS[4])
+    assert rep.refined == "simulate"
+    assert rep.labels() == gainsight.TABLE2_EXPECTED[5]
+    assert rep.best.metrics["sim_e_total_j"] > 0
+    via_method = Compiler().simulate(gainsight.TASKS[4], space=table)
+    assert via_method.labels() == rep.labels()
+    with pytest.raises(ValueError):
+        SimPolicy(objective="nosuch")
+    with pytest.raises(ValueError):
+        SimPolicy(phases=("warmup",))
+
+
+def test_sim_cache_hits_and_key_sensitivity(tmp_path):
+    """A cached simulate() re-runs neither the characterization, the
+    analytic scoring, nor the trace replay; changing the task or the sim
+    policy misses."""
+    c = Compiler()
+    t = gainsight.TASKS[1]
+    r1 = c.simulate(t, cache=tmp_path)
+    n_chz = api.characterize_call_count()
+    n_comp = composition_eval_count()
+    n_sim = sim_eval_count()
+    r2 = c.simulate(t, cache=tmp_path)
+    assert api.characterize_call_count() == n_chz
+    assert composition_eval_count() == n_comp
+    assert sim_eval_count() == n_sim, \
+        "simulate() cache hit must not re-run the trace replay"
+    assert r2.labels() == r1.labels()
+    assert [comp.labels() for comp in r2.ranked] == \
+        [comp.labels() for comp in r1.ranked]
+    for m in SIM_METRICS:
+        assert r2.best.metrics[f"sim_{m}"] == \
+            pytest.approx(r1.best.metrics[f"sim_{m}"])
+    # different sim policy -> replay re-runs (analytic stays cached)
+    c.simulate(t, cache=tmp_path, sim_policy=SimPolicy(n_bins=8))
+    assert sim_eval_count() == n_sim + 1
+    assert composition_eval_count() == n_comp
+    # different task -> everything downstream of the table re-runs
+    c.simulate(gainsight.TASKS[3], cache=tmp_path)
+    assert sim_eval_count() == n_sim + 2
+    assert composition_eval_count() == n_comp + 1
+    assert api.characterize_call_count() == n_chz
+
+
+# ------------------------------------------------------------------ profiler
+def test_arch_traces_from_synthetic_record():
+    """The profiler's trace export: a dry-run record becomes a one-phase
+    trace whose envelope matches the shape's kind and whose window follows
+    the record's roofline step time."""
+    from repro.profiler.traffic import (arch_task, arch_traces,
+                                        step_time_estimate)
+    rec = {"status": "ok",
+           "cost": {"flops_per_device": 1e15, "bytes_per_device": 1e12},
+           "collective_bytes_per_device": 1e10}
+    traces = arch_traces("qwen3-8b", "decode_32k", rec=rec, n_bins=8)
+    assert len(traces) == 1
+    tr = traces[0]
+    assert tr.phase == "decode" and tr.n_bins == 8
+    t_step = step_time_estimate(rec)
+    assert tr.duration_s == pytest.approx(4 * max(t_step, 1e-6))
+    task = arch_task("qwen3-8b", "decode_32k", rec)
+    n_slots = sum(len(lv.buckets) for lv in task.levels.values())
+    assert tr.n_slots == n_slots
+    np.testing.assert_allclose(tr.reads.sum(axis=1),
+                               tr.f_req_hz * tr.duration_s, rtol=1e-9)
+    trn = arch_traces("qwen3-8b", "train_4k", rec=rec, n_bins=8)[0]
+    assert trn.phase == "train_step"
+
+
+def test_available_arch_tasks_reports_missing(tmp_path):
+    """Empty artifacts: the profiler must say WHAT is missing, not just
+    return an empty list."""
+    from repro.profiler.traffic import available_arch_tasks
+    with pytest.warns(RuntimeWarning, match="dry-run"):
+        tasks, missing = available_arch_tasks(
+            outdir=str(tmp_path / "nowhere"), return_missing=True)
+    assert tasks == []
+    assert len(missing) > 0
+    assert all(isinstance(a, str) and isinstance(s, str)
+               for a, s in missing)
+    # default return shape is unchanged for existing callers
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert available_arch_tasks(outdir=str(tmp_path / "nowhere")) == []
