@@ -77,6 +77,23 @@ def main() -> None:
           f"(prefill+decode traces, top-8 re-rank); Table 2 matches "
           f"{n_sim_match}/7\"")
 
+    # operating-corner sweep (full record: python -m benchmarks.corner_sweep)
+    import jax
+    from repro.core import corners
+    from repro.core.characterize import characterize_corners
+
+    ops = [corners.NOMINAL, corners.HOT]
+    corner_vecs = jnp.stack([c.to_vector() for c in design_space()])
+
+    def corner_sweep():
+        out = characterize_corners(corner_vecs, ops)
+        jax.block_until_ready(out["retention_s"])
+        return out, corner_vecs.shape[0] * len(ops)
+
+    (_, n_rows), us = _timed(corner_sweep)
+    print(f"corner_sweep,{us:.0f},\"{n_rows} (config,corner) rows "
+          f"PPA+retention under one vmapped corner grid\"")
+
     # per-arch heterogeneous-memory DSE (the paper's technique on our archs)
     try:
         from benchmarks.arch_dse import arch_dse_table

@@ -6,12 +6,14 @@
    chainable ``feasible``/``pareto``/``best`` queries and npz caching.
 3. ``explore() -> DSEReport`` — the full heterogeneous-memory DSE
    (paper Table 2) in one call; see examples/heterogeneous_dse.py.
+4. Operating corners — GCRAM retention vs temperature/VDD
+   (``OperatingPoint``/``corners=``/``robust="worst_case"``).
 
 Install the package once (``pip install -e .``), then::
 
     python examples/quickstart.py
 """
-from repro.api import Compiler
+from repro.api import Compiler, OperatingPoint
 
 
 def main():
@@ -38,6 +40,30 @@ def main():
     table = compiler.table(cache="artifacts/dse_cache")
     pick = table.feasible(1.0e9, 1e-3).best("area_um2")
     print(f"1GHz/1ms   cheapest feasible macro: {pick}")
+
+    # pillar 4: retention vs temperature — the knob that flips DSE winners.
+    # GCRAM retention is Arrhenius-steep in T: the same OS-Si macro that
+    # holds data for ms at 300 K drops below a 5 ms lifetime at 85 degC, so
+    # a corner-blind DSE can crown a hot-infeasible winner (fix: build the
+    # table with corners=[...] and rank with robust="worst_case").
+    print("\n== retention vs operating point (gc_ossi 32x64) ==")
+    for vdd, temp_k, label in [(1.1, 233.0, "cold  -40C"),
+                               (1.1, 300.0, "nominal   "),
+                               (1.1, 358.0, "hot   85C "),
+                               (0.9, 300.0, "low-vdd   ")]:
+        mc = compiler.compile(mem_type="gc_ossi", word_size=32, num_words=64,
+                              op=OperatingPoint(vdd, temp_k, label.strip()))
+        print(f"  {label}  vdd={vdd:.1f}V T={temp_k:.0f}K   "
+              f"retention {mc.retention_s:10.3e} s   "
+              f"p_refresh {mc.ppa['p_refresh_w'] * 1e6:8.3f} uW")
+
+    corner_table = compiler.table(corners=["nominal", "hot"],
+                                  cache="artifacts/dse_cache")
+    robust = corner_table.worst_case_metrics()
+    n_nom = int((table.metrics["retention_s"] >= 5e-3).sum())
+    n_rob = int((robust["retention_s"] >= 5e-3).sum())
+    print(f"configs holding a 5 ms lifetime: {n_nom} at nominal, "
+          f"{n_rob} at every corner (robust)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,69 @@
+"""Regenerate the golden regression snapshot ``tests/golden/table2.json``.
+
+The snapshot freezes (a) the nominal-corner Table-2 selections through
+``explore`` and (b) the full characterization of a small, fixed config slice
+— every metric as the exact float64 repr of the float32 the vmap pipeline
+produced. ``tests/test_golden.py`` diffs live results against this file, so
+any edit to the physics fails loudly instead of silently drifting.
+
+Two equivalent update paths (documented in docs/API.md):
+
+    python scripts/update_golden.py
+    python -m pytest tests/test_golden.py --update-golden
+
+Only regenerate after an *intentional* physics change, and say so in the
+commit message.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+GOLDEN_PATH = REPO / "tests" / "golden" / "table2.json"
+
+# the frozen slice: small but covers every mem type, LS on/off, and both a
+# shallow and a deep array (delay-chain quantization edge)
+SLICE_KW = dict(word_sizes=(16, 64), num_words=(32, 256))
+
+
+def build_snapshot() -> dict:
+    import jax
+
+    from repro.api import DesignTable, design_space, explore
+    from repro.core import gainsight
+
+    report = explore(tasks=gainsight.TASKS)
+    table2 = {str(t.task_id): report.labels()[t.task_id]
+              for t in gainsight.TASKS}
+
+    configs = design_space(**SLICE_KW)
+    table = DesignTable.from_configs(configs)
+    rows = []
+    for i in range(len(table)):
+        row = table.row(i)
+        rows.append({k: (float(v) if isinstance(v, float) else v)
+                     for k, v in row.items()})
+    return {
+        "comment": "golden regression snapshot - regenerate ONLY via "
+                   "scripts/update_golden.py or pytest --update-golden",
+        "jax_version": jax.__version__,
+        "slice": {k: list(v) for k, v in SLICE_KW.items()},
+        "table2": table2,
+        "characterization": rows,
+    }
+
+
+def write_snapshot(path: Path = GOLDEN_PATH) -> Path:
+    snap = build_snapshot()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(snap, indent=1, sort_keys=True) + "\n")
+    return path
+
+
+if __name__ == "__main__":
+    p = write_snapshot()
+    print(f"wrote {p}")

@@ -15,6 +15,7 @@ _API_NAMES = (
     "explore", "DSEReport",
     "compose", "ComposePolicy", "CompositionReport",
     "simulate", "SimPolicy",
+    "OperatingPoint", "TechParams", "NOMINAL", "HOT", "CORNERS",
     "gradient_size_macro", "characterize_call_count",
 )
 

@@ -52,8 +52,12 @@ import numpy as np
 
 from repro.core import artifacts as artifacts_mod
 from repro.core import bitcells, characterize as chz, layout as layout_mod
+from repro.core import corners as corners_mod
 from repro.core import macro as macro_mod
 from repro.core import netlist as netlist_mod
+from repro.core.corners import (  # noqa: F401  (re-exported façade names)
+    CORNERS, HOT, NOMINAL, OperatingPoint, TechParams,
+)
 from repro.core.macro import MacroConfig
 from repro.core.select import (  # noqa: F401  (re-exported façade names)
     DISPLAY, PREFERENCE, TECH_FAMILIES, Bucket, BucketPick, LevelReq,
@@ -72,24 +76,27 @@ __all__ = [
     "explore", "DSEReport",
     "compose", "ComposePolicy", "CompositionReport",
     "simulate", "SimPolicy",
+    "OperatingPoint", "TechParams", "NOMINAL", "HOT", "CORNERS",
     "gradient_size_macro", "characterize_call_count",
 ]
 
 # cache schema version: bump on npz-layout changes that a physics-source
 # fingerprint can't catch (the fingerprint below already invalidates caches
-# whenever any characterization-model module is edited)
-_SCHEMA_VERSION = 1
+# whenever any characterization-model module is edited).
+# 2: per-corner metric columns + corners/physics stamped into the meta
+_SCHEMA_VERSION = 2
 
 
 @functools.lru_cache(maxsize=1)
 def _physics_fingerprint() -> str:
     """Hash of the characterization-model sources: any edit to the physics
-    (device curves, periphery, retention, geometry, characterize itself)
-    changes the fingerprint and therefore every DesignTable cache key."""
+    (device curves, periphery, retention, geometry, operating-corner
+    derivation, characterize itself) changes the fingerprint and therefore
+    every DesignTable cache key."""
     from repro.core import devices, periphery, retention, tech
     h = hashlib.sha256()
-    for mod in (bitcells, chz, devices, macro_mod, periphery, retention,
-                tech):
+    for mod in (bitcells, chz, corners_mod, devices, macro_mod, periphery,
+                retention, tech):
         h.update(Path(mod.__file__).read_bytes())
     return h.hexdigest()[:16]
 
@@ -144,6 +151,15 @@ def design_space(mem_types: Sequence[str] = DEFAULT_MEM_TYPES,
 
 SpaceLike = Union[None, "DesignTable", Sequence[MacroConfig]]
 
+# metrics where the *worst* corner is the smallest value; every other metric
+# (areas [µm²], energies [J], powers [W], delays [s]) worsens upward
+_HIGHER_IS_BETTER = frozenset({
+    "f_read_hz", "f_write_hz", "f_op_hz",
+    "bandwidth_bits_s", "bandwidth_total_bits_s", "retention_s",
+})
+# geometry columns are corner-invariant: worst-case passes them through
+_GEOMETRY_METRICS = frozenset({"rows", "cols", "mux", "bits"})
+
 
 class DesignTable:
     """Columnar (struct-of-arrays) view of a characterized design space.
@@ -155,14 +171,23 @@ class DesignTable:
     they chain::
 
         table.feasible(1e9, 1e-3).pareto("area_um2", "p_leak_w").best("area_um2")
+
+    With ``corners=[...]`` (``repro.api.OperatingPoint``s or names like
+    "hot") the characterization vmaps over the (designs × corners) grid in
+    one dispatch: the base metric columns come from ``corners[0]`` and every
+    corner additionally lands as ``<metric>@<label>`` columns (e.g.
+    ``retention_s@hot``); ``worst_case_metrics()`` reduces them to the
+    per-row worst corner for corner-robust DSE.
     """
 
     AXIS_NAMES: Tuple[str, ...] = macro_mod.VEC_FIELDS
 
     def __init__(self, axes: Mapping[str, np.ndarray],
-                 metrics: Mapping[str, np.ndarray]):
+                 metrics: Mapping[str, np.ndarray],
+                 corners: Sequence[OperatingPoint] = (corners_mod.NOMINAL,)):
         self._axes = {k: np.asarray(v) for k, v in axes.items()}
         self._metrics = {k: np.asarray(v) for k, v in metrics.items()}
+        self._corners = corners_mod.as_corners(corners)
         n = {len(v) for v in self._axes.values()}
         n |= {len(v) for v in self._metrics.values()}
         if len(n) > 1:
@@ -170,14 +195,28 @@ class DesignTable:
 
     # ------------------------------------------------------------- build/io
     @classmethod
-    def from_configs(cls, configs: Sequence[MacroConfig]) -> "DesignTable":
-        """Characterize a config list (one vmap sweep) into a table."""
+    def from_configs(cls, configs: Sequence[MacroConfig],
+                     corners=None) -> "DesignTable":
+        """Characterize a config list (one vmap sweep) into a table.
+
+        ``corners``: operating points to batch over (None = nominal only;
+        the nominal-only path is byte-identical to the pre-corner one)."""
         global _vmap_characterize_calls
         import jax.numpy as jnp
+        ops = corners_mod.as_corners(corners)
         vecs = jnp.stack([c.to_vector() for c in configs])
-        out = chz.characterize_batch(vecs)
+        if ops == (corners_mod.NOMINAL,):
+            out = chz.characterize_batch(vecs)
+            metrics = {k: np.asarray(v) for k, v in out.items()}
+        else:
+            out = chz.characterize_corners(vecs, ops)
+            metrics = {}
+            for k, v in out.items():
+                grid = np.asarray(v)                    # (N, C)
+                metrics[k] = grid[:, 0]
+                for c, op in enumerate(ops):
+                    metrics[f"{k}@{op.corner}"] = grid[:, c]
         _vmap_characterize_calls += 1
-        metrics = {k: np.asarray(v) for k, v in out.items()}
         axes = {
             "mem_type": np.array([c.mem_type for c in configs]),
             "word_size": np.array([c.word_size for c in configs], np.int64),
@@ -188,19 +227,30 @@ class DesignTable:
                                         bool),
             "mux": np.array([c.mux for c in configs], np.int64),
         }
-        return cls(axes, metrics)
+        return cls(axes, metrics, corners=ops)
 
     @classmethod
     def build(cls, space: SpaceLike = None,
-              cache: Union[None, str, Path] = None) -> "DesignTable":
+              cache: Union[None, str, Path] = None,
+              corners=None) -> "DesignTable":
         """Characterize ``space`` (default: the paper grid), consulting an
-        npz cache directory keyed on the config-grid hash when given."""
+        npz cache directory keyed on the (config grid, corners) hash when
+        given. ``corners``: operating points to batch over (None = nominal;
+        a pre-built ``space`` table must already carry them)."""
         if isinstance(space, DesignTable):
+            if corners is not None \
+                    and corners_mod.as_corners(corners) != space.corners:
+                raise ValueError(
+                    f"corners={corners!r} conflicts with the pre-built "
+                    f"table's corners {[op.corner for op in space.corners]}; "
+                    f"rebuild the table with DesignTable.build(configs, "
+                    f"corners=...)")
             return space
         configs = list(space) if space is not None else design_space()
         if cache is None:
-            return cls.from_configs(configs)
-        cache_path = Path(cache) / f"table_{grid_hash(configs)}.npz"
+            return cls.from_configs(configs, corners=corners)
+        cache_path = Path(cache) / \
+            f"table_{grid_hash(configs, corners=corners)}.npz"
         if cache_path.exists():
             try:
                 return cls.load(cache_path)
@@ -208,32 +258,52 @@ class DesignTable:
                 warnings.warn(f"ignoring unreadable DesignTable cache "
                               f"{cache_path}: {e}", RuntimeWarning,
                               stacklevel=2)
-        table = cls.from_configs(configs)
+        table = cls.from_configs(configs, corners=corners)
         table.save(cache_path)
         return table
 
     def save(self, path: Union[str, Path]) -> Path:
-        """Persist axes + metrics to ``path`` (npz, grid-hash stamped)."""
+        """Persist axes + metrics to ``path`` (npz, stamped with the grid
+        hash, the operating corners, and the physics-source fingerprint)."""
         path = Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
         payload = {f"axis_{k}": v for k, v in self._axes.items()}
         payload.update({f"metric_{k}": v for k, v in self._metrics.items()})
-        meta = {"schema": _SCHEMA_VERSION, "grid_hash": self.grid_hash}
+        meta = {"schema": _SCHEMA_VERSION, "grid_hash": self.grid_hash,
+                "physics": _physics_fingerprint(),
+                "corners": [[float(op.vdd), float(op.temp_k), op.corner]
+                            for op in self._corners]}
         np.savez(path, __meta__=json.dumps(meta), **payload)
         return path
 
     @classmethod
     def load(cls, path: Union[str, Path]) -> "DesignTable":
+        """Load a saved table, rejecting stale caches loudly: a snapshot
+        whose stored physics fingerprint no longer matches the current
+        characterization sources raises instead of silently reusing numbers
+        the live models would no longer produce."""
         with np.load(Path(path), allow_pickle=False) as z:
             meta = json.loads(str(z["__meta__"]))
             if meta.get("schema") != _SCHEMA_VERSION:
                 raise ValueError(
                     f"{path}: cache schema {meta.get('schema')} != "
                     f"{_SCHEMA_VERSION}; delete the cache and re-run")
+            stored = meta.get("physics")
+            if stored != _physics_fingerprint():
+                raise ValueError(
+                    f"{path}: stale physics fingerprint {stored} != current "
+                    f"{_physics_fingerprint()} (the characterization models "
+                    f"changed since this cache was written); delete the "
+                    f"cache or re-run DesignTable.build")
+            ops = tuple(OperatingPoint(vdd=c[0], temp_k=c[1], corner=str(c[2]))
+                        for c in meta.get("corners",
+                                          [[corners_mod.NOMINAL.vdd,
+                                            corners_mod.NOMINAL.temp_k,
+                                            "nominal"]]))
             axes = {k[5:]: z[k] for k in z.files if k.startswith("axis_")}
             metrics = {k[7:]: z[k] for k in z.files
                        if k.startswith("metric_")}
-        return cls(axes, metrics)
+        return cls(axes, metrics, corners=ops)
 
     # ------------------------------------------------------------ accessors
     def __len__(self) -> int:
@@ -270,9 +340,69 @@ class DesignTable:
         return np.array([family_of(mt) for mt in self._axes["mem_type"]])
 
     @property
+    def corners(self) -> Tuple[OperatingPoint, ...]:
+        """The operating points this table was characterized at, in column
+        order (``corners[0]`` backs the base metric columns)."""
+        return self._corners
+
+    @property
+    def corner_labels(self) -> Tuple[str, ...]:
+        return tuple(op.corner for op in self._corners)
+
+    def corner_metrics(self, corner: str) -> Dict[str, np.ndarray]:
+        """Base-named metric dict evaluated at one corner label (the
+        ``<metric>@<corner>`` columns, re-keyed without the suffix)."""
+        if corner not in self.corner_labels:
+            raise KeyError(f"corner {corner!r} not in table corners "
+                           f"{self.corner_labels}; build the table with "
+                           f"corners=[...] including it")
+        if len(self._corners) == 1:
+            return dict(self._metrics)
+        suffix = f"@{corner}"
+        return {k[:-len(suffix)]: v for k, v in self._metrics.items()
+                if k.endswith(suffix)}
+
+    def worst_case_metrics(self) -> Dict[str, np.ndarray]:
+        """Per-row worst-corner reduction of every base metric: min over
+        corners for rate-like metrics (``f_*``, ``bandwidth_*``,
+        ``retention_s``), max for cost-like ones (areas, energies, powers,
+        delays); geometry columns pass through. Feasibility/ranking on this
+        dict is the ``robust="worst_case"`` DSE mode — a design must satisfy
+        the requirement at EVERY characterized corner."""
+        if len(self._corners) == 1:
+            return dict(self._metrics)
+        base = [k for k in self._metrics if "@" not in k]
+        out: Dict[str, np.ndarray] = {}
+        for k in base:
+            stack_keys = [f"{k}@{op.corner}" for op in self._corners]
+            # geometry and derived with_column() columns have no per-corner
+            # variants: pass them through as-is
+            if k in _GEOMETRY_METRICS or \
+                    not all(sk in self._metrics for sk in stack_keys):
+                out[k] = self._metrics[k]
+                continue
+            stack = np.stack([self._metrics[sk] for sk in stack_keys], axis=1)
+            out[k] = (stack.min(axis=1) if k in _HIGHER_IS_BETTER
+                      else stack.max(axis=1))
+        return out
+
+    def robust_metrics(self, robust: Optional[str]) -> Dict[str, np.ndarray]:
+        """The metric dict a DSE pass should rank on: ``None`` -> the base
+        (``corners[0]``) columns, ``"worst_case"`` -> the per-row worst
+        corner."""
+        if robust is None:
+            return self.metrics
+        if robust == "worst_case":
+            return self.worst_case_metrics()
+        raise ValueError(f"unknown robust mode {robust!r}; "
+                         f"valid: None, 'worst_case'")
+
+    @property
     def grid_hash(self) -> str:
-        """Cache key: config grid (axes) + physics-source fingerprint."""
+        """Cache key: config grid (axes) + operating corners +
+        physics-source fingerprint."""
         h = _hash_seed()
+        h.update(corners_mod.corners_fingerprint(self._corners).encode())
         for name in self.AXIS_NAMES:
             col = self._axes[name]
             h.update(name.encode())
@@ -310,7 +440,8 @@ class DesignTable:
         if len(values) != len(self):
             raise ValueError(f"column {name}: length {len(values)} != "
                              f"{len(self)}")
-        return DesignTable(self._axes, {**self._metrics, name: values})
+        return DesignTable(self._axes, {**self._metrics, name: values},
+                           corners=self._corners)
 
     # -------------------------------------------------------------- queries
     def filter(self, mask) -> "DesignTable":
@@ -320,7 +451,8 @@ class DesignTable:
             mask = mask(self)
         mask = np.asarray(mask, bool)
         return DesignTable({k: v[mask] for k, v in self._axes.items()},
-                           {k: v[mask] for k, v in self._metrics.items()})
+                           {k: v[mask] for k, v in self._metrics.items()},
+                           corners=self._corners)
 
     def feasible(self, f_hz: float, lifetime_s: float,
                  allow_refresh: bool = False) -> "DesignTable":
@@ -359,14 +491,21 @@ class DesignTable:
         return self.macro(i)
 
     def __repr__(self) -> str:
+        extra = "" if len(self._corners) == 1 and \
+            self._corners == (corners_mod.NOMINAL,) else \
+            f", corners={list(self.corner_labels)}"
         return (f"DesignTable({len(self)} configs x "
-                f"{len(self._metrics)} metrics, grid={self.grid_hash})")
+                f"{len(self._metrics)} metrics, grid={self.grid_hash}"
+                f"{extra})")
 
 
-def grid_hash(configs: Sequence[MacroConfig]) -> str:
-    """Cache key of a config grid without characterizing it (includes the
-    physics-source fingerprint, so model edits invalidate old caches)."""
+def grid_hash(configs: Sequence[MacroConfig], corners=None) -> str:
+    """Cache key of a (config grid, corners) pair without characterizing it
+    (includes the physics-source fingerprint, so model edits invalidate old
+    caches)."""
     h = _hash_seed()
+    h.update(corners_mod.corners_fingerprint(
+        corners_mod.as_corners(corners)).encode())
     for name in DesignTable.AXIS_NAMES:
         if name == "mem_type":
             col = np.array([c.mem_type for c in configs], dtype="U16")
@@ -460,13 +599,15 @@ class Compiler:
 
             Compiler().compile(mem_type="gc_ossi", word_size=64, num_words=128)
         """
+        op = overrides.pop("op", None)
         if config is None:
             config = MacroConfig(**overrides)
         elif overrides:
             config = dataclasses.replace(config, **overrides)
         if config.mem_type not in bitcells.BITCELLS:
             raise KeyError(f"unknown mem_type {config.mem_type!r}")
-        return Macro(config=config, ppa=chz.characterize_config(config))
+        return Macro(config=config, ppa=chz.characterize_config(config,
+                                                                tp=op))
 
     # ----------------------------------------------------------- exploration
     def design_space(self, **kw) -> List[MacroConfig]:
@@ -474,23 +615,33 @@ class Compiler:
         return design_space(**kw)
 
     def table(self, space: SpaceLike = None,
-              cache: Union[None, str, Path] = None) -> DesignTable:
+              cache: Union[None, str, Path] = None,
+              corners=None) -> DesignTable:
         if space is None:
             space = self.design_space()
-        return DesignTable.build(space, cache=cache)
+        return DesignTable.build(space, cache=cache, corners=corners)
 
     def explore(self, tasks=None, space: SpaceLike = None,
                 policy: Optional[SelectionPolicy] = None,
-                cache: Union[None, str, Path] = None) -> "DSEReport":
+                cache: Union[None, str, Path] = None,
+                corners=None, robust: Optional[str] = None) -> "DSEReport":
+        """Independent per-level DSE; see module-level ``explore``.
+
+        ``corners`` operating points to characterize at (None = nominal);
+        ``robust="worst_case"`` selects on per-row worst-corner metrics so a
+        winner must meet the requirement at every corner.
+        """
         if space is None:
             space = self.design_space()
-        return explore(space=space, tasks=tasks, policy=policy, cache=cache)
+        return explore(space=space, tasks=tasks, policy=policy, cache=cache,
+                       corners=corners, robust=robust)
 
     def compose(self, task, space: SpaceLike = None,
                 policy: Optional[SelectionPolicy] = None,
                 compose_policy=None, cache: Union[None, str, Path] = None,
                 sharded: bool = False, refine: Optional[str] = None,
-                sim_policy=None):
+                sim_policy=None, corners=None,
+                robust: Optional[str] = None):
         """Joint heterogeneous composition for one task -> CompositionReport.
 
         Where ``explore`` picks each cache level independently, ``compose``
@@ -508,18 +659,23 @@ class Compiler:
         ``sharded`` spread the composition grid across all visible devices.
         ``refine``  ``"simulate"`` re-ranks the analytic top-K by trace
                     replay (see ``Compiler.simulate``).
+        ``corners`` operating points to characterize at (None = nominal).
+        ``robust``  ``"worst_case"`` prices candidates/feasibility on the
+                    per-row worst corner (see ``DesignTable.worst_case_metrics``).
         """
         if space is None:
             space = self.design_space()
         return compose(space=space, task=task, policy=policy,
                        compose_policy=compose_policy, cache=cache,
-                       sharded=sharded, refine=refine, sim_policy=sim_policy)
+                       sharded=sharded, refine=refine, sim_policy=sim_policy,
+                       corners=corners, robust=robust)
 
     def simulate(self, task, space: SpaceLike = None,
                  policy: Optional[SelectionPolicy] = None,
                  compose_policy=None, sim_policy=None,
                  cache: Union[None, str, Path] = None,
-                 sharded: bool = False):
+                 sharded: bool = False, corners=None,
+                 robust: Optional[str] = None):
         """Simulate-then-rerank DSE for one task -> CompositionReport.
 
         Prunes the composition grid analytically (``compose``) to the
@@ -541,7 +697,8 @@ class Compiler:
         return self.compose(task, space=space, policy=policy,
                             compose_policy=compose_policy, cache=cache,
                             sharded=sharded, refine="simulate",
-                            sim_policy=sim_policy)
+                            sim_policy=sim_policy, corners=corners,
+                            robust=robust)
 
     def gradient_size(self, config: MacroConfig, **kw) -> Dict[str, float]:
         """Beyond-paper continuous device sizing (see gradient_size_macro)."""
@@ -563,6 +720,8 @@ class DSEReport:
     tasks: Tuple[TaskReq, ...]
     policy: SelectionPolicy
     selections: Dict[object, Dict[str, LevelSelection]]
+    # "worst_case" when the selections ranked per-row worst-corner metrics
+    robust: Optional[str] = None
 
     def labels(self) -> Dict[object, Dict[str, str]]:
         """Table 2: ``{task_id: {"L1": label, "L2": label}}``."""
@@ -606,7 +765,8 @@ class DSEReport:
 
 def explore(space: SpaceLike = None, tasks=None,
             policy: Optional[SelectionPolicy] = None,
-            cache: Union[None, str, Path] = None) -> DSEReport:
+            cache: Union[None, str, Path] = None,
+            corners=None, robust: Optional[str] = None) -> DSEReport:
     """One call from design space to heterogeneous-memory report.
 
     ``space``   MacroConfig list, an existing DesignTable, or None for the
@@ -616,15 +776,22 @@ def explore(space: SpaceLike = None, tasks=None,
     ``policy``  SelectionPolicy (paper default: OS-Si > Si-Si > SRAM, no
                 refresh).
     ``cache``   directory for the grid-hash-keyed DesignTable cache; a second
-                explore() on the same grid skips the vmap characterization.
+                explore() on the same (grid, corners) skips the vmap
+                characterization.
+    ``corners`` operating points (``OperatingPoint``s / names) batched into
+                the characterization; None = nominal only.
+    ``robust``  ``"worst_case"`` ranks/filters on the per-row worst corner
+                (a pick must be feasible at EVERY corner); None ranks on the
+                base (``corners[0]``) columns — with the default corners
+                this is exactly the paper's nominal Table-2 path.
     """
     if tasks is None:
         from repro.core import gainsight
         tasks = gainsight.TASKS
     task_reqs = tuple(as_task_req(t) for t in tasks)
     policy = policy or SelectionPolicy()
-    table = DesignTable.build(space, cache=cache)
-    metrics = table.metrics
+    table = DesignTable.build(space, cache=cache, corners=corners)
+    metrics = table.robust_metrics(robust)
     families = table.families
     selections: Dict[object, Dict[str, LevelSelection]] = {}
     for t in task_reqs:
@@ -632,14 +799,15 @@ def explore(space: SpaceLike = None, tasks=None,
             lvl: select_level(metrics, families, req, policy)
             for lvl, req in t.levels.items()}
     return DSEReport(table=table, tasks=task_reqs, policy=policy,
-                     selections=selections)
+                     selections=selections, robust=robust)
 
 
 def simulate(space: SpaceLike = None, task=None,
              policy: Optional[SelectionPolicy] = None,
              compose_policy=None, sim_policy=None,
              cache: Union[None, str, Path] = None,
-             sharded: bool = False) -> CompositionReport:
+             sharded: bool = False, corners=None,
+             robust: Optional[str] = None) -> CompositionReport:
     """Simulate-then-rerank DSE: ``compose(refine="simulate")``.
 
     Analytic top-K prune, then trace replay (``repro.sim``) re-ranks the
@@ -649,7 +817,8 @@ def simulate(space: SpaceLike = None, task=None,
     """
     return compose(space=space, task=task, policy=policy,
                    compose_policy=compose_policy, cache=cache,
-                   sharded=sharded, refine="simulate", sim_policy=sim_policy)
+                   sharded=sharded, refine="simulate", sim_policy=sim_policy,
+                   corners=corners, robust=robust)
 
 
 # ---------------------------------------------------------------------------

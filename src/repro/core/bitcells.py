@@ -11,7 +11,7 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
-from repro.core import devices, tech
+from repro.core import corners, devices, tech
 
 
 class BitcellParams(NamedTuple):
@@ -98,12 +98,14 @@ def take_bitcell(stacked: BitcellParams, idx):
                            for f in BitcellParams._fields])
 
 
-def sn_high_level(cell: BitcellParams, level_shift):
+def sn_high_level(cell: BitcellParams, level_shift, tp=None):
     """Stored-'1' voltage on SN: degraded by the write device VT unless the
-    WWL is boosted by a level shifter."""
+    WWL is boosted by a level shifter. ``tp`` = operating corner (the stored
+    level tracks the supply)."""
+    tp = corners.resolve(tp)
     wdev = devices.take_device(DEVICE_STACK, cell.write_dev.astype(jnp.int32))
-    degraded = tech.VDD - wdev.vt
+    degraded = tp.vdd - wdev.vt
     is_gc = cell.kind > 0
-    full = jnp.asarray(tech.VDD, jnp.float32)
+    full = jnp.asarray(tp.vdd, jnp.float32)
     lvl = jnp.where(level_shift > 0, full, degraded)
     return jnp.where(is_gc, lvl, full)

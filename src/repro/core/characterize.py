@@ -6,48 +6,62 @@ discharging/charging the RBL -> column mux -> sense amp -> output DFF, with
 the control delay-chain quantization that produces the paper's 1:1-aspect
 frequency cliff. Everything is jnp -> the whole design space characterizes
 under one vmap (and is differentiable for the gradient sizing optimizer).
+
+Every stage takes the operating corner (``repro.core.corners.TechParams``)
+as an optional trailing argument: the nominal default reproduces the
+pre-corner pipeline bit-for-bit, and ``characterize_corners`` vmaps the
+whole thing over a stacked (designs x corners) grid in one dispatch.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitcells, devices, macro, periphery, retention, tech
+from repro.core import bitcells, corners, devices, macro, periphery, \
+    retention, tech
 
 
-def _read_current(cell, ls):
+def _read_current(cell, ls, tp=None):
     """Worst-case sense current: stored-'0' on-current minus the residual
     false current of a worst-case droopy '1' (smaller margin without LS)."""
+    tp = corners.resolve(tp)
     rdev = devices.take_device(bitcells.DEVICE_STACK,
                                cell.read_dev.astype(jnp.int32))
-    i0 = devices.mosfet_id(rdev, tech.VDD, 0.5 * tech.VDD, cell.w_read)
-    v1 = bitcells.sn_high_level(cell, ls)
-    i1 = devices.mosfet_id(rdev, tech.VDD - v1, 0.5 * tech.VDD, cell.w_read)
+    i0 = devices.mosfet_id(rdev, tp.vdd, 0.5 * tp.vdd, cell.w_read, tp)
+    v1 = bitcells.sn_high_level(cell, ls, tp)
+    i1 = devices.mosfet_id(rdev, tp.vdd - v1, 0.5 * tp.vdd, cell.w_read, tp)
     return jnp.maximum(i0 - i1, 0.05 * i0)
 
 
-def _write_current(cell, ls):
+def _write_current(cell, ls, tp=None):
     """Write-device current charging the SN to its target level (end-of-write
     overdrive: WWL - 0.9*target)."""
+    tp = corners.resolve(tp)
     wdev = devices.take_device(bitcells.DEVICE_STACK,
                                cell.write_dev.astype(jnp.int32))
-    vwwl = jnp.where(ls > 0, tech.VDD_BOOST, tech.VDD)
-    v_t = bitcells.sn_high_level(cell, ls)
+    vwwl = jnp.where(ls > 0, tp.vdd_boost, tp.vdd)
+    v_t = bitcells.sn_high_level(cell, ls, tp)
     vgs = vwwl - 0.9 * v_t
-    return devices.mosfet_id(wdev, vgs, jnp.maximum(tech.VDD - 0.9 * v_t, 0.1),
-                             cell.w_write)
+    return devices.mosfet_id(wdev, vgs, jnp.maximum(tp.vdd - 0.9 * v_t, 0.1),
+                             cell.w_write, tp)
 
 
-def _sram_cell_current(cell):
+def _sram_cell_current(cell, tp=None):
+    tp = corners.resolve(tp)
     adev = devices.take_device(bitcells.DEVICE_STACK,
                                cell.write_dev.astype(jnp.int32))
-    return 0.8 * devices.i_on(adev, cell.w_write)
+    return 0.8 * devices.i_on(adev, cell.w_write, tp=tp)
 
 
-def characterize(vec):
-    """Full PPA + retention characterization of one config vector.
+def characterize(vec, tp=None):
+    """Full PPA + retention characterization of one config vector at one
+    operating corner (``tp``: TechParams / OperatingPoint / corner name;
+    None = nominal).
 
     Returns a flat dict of jnp scalars (vmap-able)."""
+    tp = corners.resolve(tp)
     g = macro.geometry(vec)
     cell, rows, cols = g["cell"], g["rows"], g["cols"]
     ls, m, wz = g["ls"], g["mux"], g["wz"]
@@ -56,39 +70,41 @@ def characterize(vec):
     area, breakdown = macro.macro_area(g)
 
     # ---------------- read path -------------------------------------------
-    dec_a, t_dec, e_dec, l_dec = periphery.decoder(rows)
+    dec_a, t_dec, e_dec, l_dec = periphery.decoder(rows, tp)
     c_wl, r_wl = periphery.wordline_rc(cols, cell.cell_w, cell.w_read)
-    _, t_wl, e_wl, l_wl = periphery.wl_driver(c_wl, r_wl)
+    _, t_wl, e_wl, l_wl = periphery.wl_driver(c_wl, r_wl, tp=tp)
     c_bl, r_bl = periphery.bitline_rc(rows, cell.cell_h, cell.w_read)
 
-    i_rd_gc = _read_current(cell, ls)
-    t_bl_gc = c_bl * tech.V_SENSE / jnp.maximum(i_rd_gc, 1e-9)
-    i_rd_sram = _sram_cell_current(cell)
-    t_bl_sram = c_bl * tech.V_SENSE_SRAM / jnp.maximum(i_rd_sram, 1e-9)
+    i_rd_gc = _read_current(cell, ls, tp)
+    t_bl_gc = c_bl * tp.v_sense / jnp.maximum(i_rd_gc, 1e-9)
+    i_rd_sram = _sram_cell_current(cell, tp)
+    t_bl_sram = c_bl * tp.v_sense_sram / jnp.maximum(i_rd_sram, 1e-9)
     t_bl = jnp.where(is_gc > 0, t_bl_gc, t_bl_sram)
 
-    _, t_mux, e_mux, l_mux = periphery.column_mux(m)
-    sa_a, t_sa, e_sa, l_sa = periphery.sense_amp()
-    sa_a2, t_sa2, e_sa2, l_sa2 = periphery.sense_amp(current_mode=True)
+    _, t_mux, e_mux, l_mux = periphery.column_mux(m, tp)
+    sa_a, t_sa, e_sa, l_sa = periphery.sense_amp(tp=tp)
+    sa_a2, t_sa2, e_sa2, l_sa2 = periphery.sense_amp(current_mode=True, tp=tp)
     t_sa = jnp.where(g["sa_cm"] > 0, t_sa2, t_sa)
     e_sa = jnp.where(g["sa_cm"] > 0, e_sa2, e_sa)
 
     t_read = (tech.T_DFF_CQ + t_dec + t_wl + 0.7 * r_bl * c_bl + t_bl
               + t_mux + t_sa + tech.T_SETUP)
-    t_read_cyc, dc_a, e_dc, l_dc = periphery.delay_chain(t_read)
+    t_read_cyc, dc_a, e_dc, l_dc = periphery.delay_chain(t_read, tp)
 
     # ---------------- write path ------------------------------------------
     c_wwl, r_wwl = periphery.wordline_rc(cols, cell.cell_w, cell.w_write)
-    _, t_wwl, e_wwl, l_wwl = periphery.wl_driver(c_wwl, r_wwl, boost=True)
-    ls_a, t_ls, e_ls, l_ls = periphery.level_shifter()
+    _, t_wwl, e_wwl, l_wwl = periphery.wl_driver(c_wwl, r_wwl, boost=True,
+                                                 tp=tp)
+    ls_a, t_ls, e_ls, l_ls = periphery.level_shifter(tp)
     t_wwl = t_wwl + ls * t_ls * is_gc
     c_wbl, _ = periphery.bitline_rc(rows, cell.cell_h, cell.w_write)
-    wd_a, t_wd, e_wd, l_wd = periphery.write_driver(c_wbl)
-    i_w = _write_current(cell, ls)
-    t_sn = cell.c_sn * bitcells.sn_high_level(cell, ls) / jnp.maximum(i_w, 1e-9)
+    wd_a, t_wd, e_wd, l_wd = periphery.write_driver(c_wbl, tp)
+    i_w = _write_current(cell, ls, tp)
+    t_sn = cell.c_sn * bitcells.sn_high_level(cell, ls, tp) \
+        / jnp.maximum(i_w, 1e-9)
     t_sn = jnp.where(is_gc > 0, t_sn, 30e-12)       # SRAM: driver overpowers
     t_write = tech.T_DFF_CQ + t_dec + t_wwl + t_wd + t_sn + tech.T_SETUP
-    t_write_cyc, _, _, _ = periphery.delay_chain(t_write)
+    t_write_cyc, _, _, _ = periphery.delay_chain(t_write, tp)
 
     # ---------------- frequency / bandwidth --------------------------------
     f_read = 1.0 / t_read_cyc
@@ -104,31 +120,31 @@ def characterize(vec):
         is_gc > 0, wz * (f_read + f_write * g["dual"]), wz * f_sram * 0.7)
 
     # ---------------- energy / power ---------------------------------------
-    e_bl_rd = c_bl * tech.VDD * tech.V_SENSE * cols / jnp.maximum(m, 1.0)
-    e_read = (e_dec + e_wl + c_wl * tech.VDD ** 2 + e_bl_rd + wz * e_sa
+    e_bl_rd = c_bl * tp.vdd * tp.v_sense * cols / jnp.maximum(m, 1.0)
+    e_read = (e_dec + e_wl + c_wl * tp.vdd ** 2 + e_bl_rd + wz * e_sa
               + e_mux + 2 * wz * tech.E_DFF)
     # one write asserts a single WWL, so exactly one row's level shifter
     # switches per access (a previous revision multiplied by `rows` and then
     # zeroed the whole term out; the boost-rail recharge is the separate
     # c_wwl term below)
     e_write = (e_dec + e_wwl + e_wd * wz + ls * e_ls * is_gc
-               + c_wbl * tech.VDD ** 2 * wz * 0.5 + wz * tech.E_DFF
-               + ls * is_gc * (c_wwl * (tech.VDD_BOOST ** 2 - tech.VDD ** 2)))
+               + c_wbl * tp.vdd ** 2 * wz * 0.5 + wz * tech.E_DFF
+               + ls * is_gc * (c_wwl * (tp.vdd_boost ** 2 - tp.vdd ** 2)))
     p_dyn = (e_read + e_write * 0.5) * f_op * tech.ACTIVITY
 
     # leakage: SRAM array has static VDD->GND paths; GC array has none.
     adev = devices.take_device(bitcells.DEVICE_STACK,
                                cell.write_dev.astype(jnp.int32))
-    i_cell_leak = cell.leak_paths * devices.i_off(adev, 0.15)
+    i_cell_leak = cell.leak_paths * devices.i_off(adev, 0.15, tp=tp)
     ncells = g["wz"] * g["nw"]
-    p_leak_array = ncells * i_cell_leak * tech.VDD
+    p_leak_array = ncells * i_cell_leak * tp.vdd
     periph_leak = (l_dec * (1 + g["dual"]) + l_wl + l_wwl + wz * (l_sa + l_wd)
                    + l_mux * cols + l_dc + ls * l_ls * rows * is_gc
-                   + periphery.control()[3]) * g["banks"]
-    p_leak = p_leak_array + periph_leak * tech.VDD
+                   + periphery.control(tp)[3]) * g["banks"]
+    p_leak = p_leak_array + periph_leak * tp.vdd
 
     # ---------------- retention / refresh -----------------------------------
-    t_ret = jnp.where(is_gc > 0, retention.retention_time(cell, ls), 1e12)
+    t_ret = jnp.where(is_gc > 0, retention.retention_time(cell, ls, tp), 1e12)
     p_refresh = jnp.where(
         is_gc > 0,
         (e_read + e_write) * g["nw"] / jnp.maximum(t_ret, 1e-9), 0.0)
@@ -152,8 +168,33 @@ def characterize(vec):
 
 characterize_batch = jax.jit(jax.vmap(characterize))
 
+# (designs, corners) grid in one dispatch: inner vmap over the stacked
+# TechParams corner axis, outer over config vectors. Metric shapes (N, C).
+characterize_corners_batch = jax.jit(
+    jax.vmap(jax.vmap(characterize, in_axes=(None, 0)), in_axes=(0, None)))
 
-def characterize_config(cfg: macro.MacroConfig):
-    """Single-config convenience wrapper returning python floats."""
-    out = jax.jit(characterize)(cfg.to_vector())
+
+def characterize_corners(vecs, ops):
+    """Characterize config vectors ``vecs`` (N, 7) at every operating point
+    of ``ops`` (OperatingPoints / corner names) in one vmapped dispatch.
+
+    Returns a dict of (N, C) jnp arrays, corner order = ``ops`` order."""
+    tps = corners.stack_tech([corners.as_operating_point(o) for o in ops])
+    return characterize_corners_batch(vecs, tps)
+
+
+# one jitted closure per corner: tp stays a python-float NamedTuple closed
+# over the trace, so its values fold to the same constants the pre-corner
+# pipeline folded (bit-for-bit at nominal) instead of becoming traced args
+@functools.lru_cache(maxsize=32)
+def _characterize_jit(tp):
+    return jax.jit(functools.partial(characterize, tp=tp))
+
+
+def characterize_config(cfg: macro.MacroConfig, tp=None):
+    """Single-config convenience wrapper returning python floats.
+
+    ``tp``: operating corner (TechParams / OperatingPoint / name; None =
+    nominal)."""
+    out = _characterize_jit(corners.resolve(tp))(cfg.to_vector())
     return {k: float(v) for k, v in out.items()}

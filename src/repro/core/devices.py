@@ -14,7 +14,7 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
-from repro.core import tech
+from repro.core import corners, tech
 
 
 class DeviceParams(NamedTuple):
@@ -33,27 +33,36 @@ def _F(u):
     return sp * sp
 
 
-def mosfet_id(dev: DeviceParams, vgs, vds, w_um):
+def mosfet_id(dev: DeviceParams, vgs, vds, w_um, tp=None):
     """Drain current [A] for gate-source / drain-source voltages (NMOS sign
-    convention; PMOS callers pass magnitudes)."""
+    convention; PMOS callers pass magnitudes).
+
+    ``tp`` is the operating corner (``corners.TechParams`` /
+    ``OperatingPoint`` / name; None = nominal): the thermal voltage widens
+    the subthreshold slope with T, the channel current carries the mobility
+    factor, and the off-state floor the Arrhenius leakage factor."""
+    tp = corners.resolve(tp)
     vgs = jnp.asarray(vgs, jnp.float32)
     vds = jnp.asarray(vds, jnp.float32)
     vt_eff = dev.vt - dev.eta_dibl * vds
-    nut = dev.n * tech.UT
+    nut = dev.n * tp.ut
     i_ch = dev.ispec * (_F((vgs - vt_eff) / nut)
                         - _F((vgs - vt_eff - dev.n * vds) / nut))
-    i_ch = jnp.maximum(i_ch, 0.0)
-    return (i_ch + dev.i_floor * jnp.sign(jnp.maximum(vds, 0.0))) * w_um
+    i_ch = jnp.maximum(i_ch, 0.0) * tp.drive_scale
+    floor = dev.i_floor * tp.leak_scale
+    return (i_ch + floor * jnp.sign(jnp.maximum(vds, 0.0))) * w_um
 
 
-def i_on(dev: DeviceParams, w_um, vdd=None):
-    v = tech.VDD if vdd is None else vdd
-    return mosfet_id(dev, v, v, w_um)
+def i_on(dev: DeviceParams, w_um, vdd=None, tp=None):
+    tp = corners.resolve(tp)
+    v = tp.vdd if vdd is None else vdd
+    return mosfet_id(dev, v, v, w_um, tp)
 
 
-def i_off(dev: DeviceParams, w_um, vds=None):
-    v = tech.VDD if vds is None else vds
-    return mosfet_id(dev, 0.0, v, w_um)
+def i_off(dev: DeviceParams, w_um, vds=None, tp=None):
+    tp = corners.resolve(tp)
+    v = tp.vdd if vds is None else vds
+    return mosfet_id(dev, 0.0, v, w_um, tp)
 
 
 def _mk(vt, ss_mv, ion_target, eta, i_floor, j_gate, polarity=1):

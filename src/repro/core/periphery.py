@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import devices, tech
+from repro.core import corners, devices, tech
 
 INV_LEAK = 60e-12    # A per um of gate width, periphery std-cell average
 INV_CIN = 1.5e-15    # F per um of input gate width
@@ -29,23 +29,26 @@ def bitline_rc(rows, cell_h, w_drain):
     return c, r
 
 
-def decoder(rows):
+def decoder(rows, tp=None):
     """Row decoder: predecode + final NAND per row. Returns (area, delay,
-    energy/access, leakage)."""
+    energy/access, leakage). ``tp`` = operating corner (switching energies
+    scale with vdd^2)."""
+    tp = corners.resolve(tp)
     n_addr = jnp.ceil(jnp.log2(jnp.maximum(rows, 2.0)))
     stages = 2.0 + jnp.ceil(n_addr / 3.0)          # predecode depth
     area = rows * tech.GATE_AREA + n_addr * 4.0 * tech.GATE_AREA
     delay = stages * tech.T_GATE
-    energy = (n_addr * 4.0 + 2.0) * 1.2e-15 * tech.VDD ** 2
+    energy = (n_addr * 4.0 + 2.0) * 1.2e-15 * tp.vdd ** 2
     leak = (rows + n_addr * 4.0) * 0.5 * INV_LEAK
     return area, delay, energy, leak
 
 
-def wl_driver(c_load, r_wire, boost=False):
+def wl_driver(c_load, r_wire, boost=False, tp=None):
     """Auto-sized WL driver: fixed ~T_WL_DRV drive delay + wire RC tail; area
     scales with the load it must drive. `boost` = driven from VDD_BOOST rail
     (level-shifted WWL)."""
-    vdd = tech.VDD_BOOST if boost else tech.VDD
+    tp = corners.resolve(tp)
+    vdd = tp.vdd_boost if boost else tp.vdd
     w_drv = jnp.maximum(c_load / (8.0 * INV_CIN), 1.0)      # fanout-of-8 sizing
     area = 0.8 + 0.35 * w_drv
     delay = tech.T_WL_DRV + 0.4 * r_wire * c_load
@@ -54,64 +57,74 @@ def wl_driver(c_load, r_wire, boost=False):
     return area, delay, energy, leak
 
 
-def level_shifter():
+def level_shifter(tp=None):
     """WWL level shifter (per row): area + small insertion delay. The boost
     rail also costs an extra power ring at the macro level (macro.py)."""
-    return tech.LS_AREA, 18e-12, 2.5e-15 * tech.VDD_BOOST ** 2 / tech.VDD ** 2, 2 * INV_LEAK
+    tp = corners.resolve(tp)
+    return tech.LS_AREA, 18e-12, 2.5e-15 * tp.vdd_boost ** 2 / tp.vdd ** 2, 2 * INV_LEAK
 
 
-def sense_amp(current_mode=False):
+def sense_amp(current_mode=False, tp=None):
+    tp = corners.resolve(tp)
+    e_sa = tech.E_SA * (tp.vdd ** 2 / tech.VDD ** 2)   # CV^2-class sense op
     if current_mode:
-        return tech.SA_AREA_CURRENT, tech.T_SA_CURRENT, tech.E_SA * 1.6, 4 * INV_LEAK
-    return tech.SA_AREA, tech.T_SA, tech.E_SA, 3 * INV_LEAK
+        return tech.SA_AREA_CURRENT, tech.T_SA_CURRENT, e_sa * 1.6, 4 * INV_LEAK
+    return tech.SA_AREA, tech.T_SA, e_sa, 3 * INV_LEAK
 
 
-def write_driver(c_bl):
+def write_driver(c_bl, tp=None):
+    tp = corners.resolve(tp)
     w_drv = jnp.maximum(c_bl / (10.0 * INV_CIN), 1.0)
     area = tech.WRITE_DRV_AREA + 0.3 * w_drv
-    delay = 20e-12 + c_bl * tech.VDD / devices.i_on(devices.SI_NMOS, w_drv)
-    energy = c_bl * tech.VDD ** 2 * 0.5            # avg data activity
+    delay = 20e-12 + c_bl * tp.vdd / devices.i_on(devices.SI_NMOS, w_drv,
+                                                  tp=tp)
+    energy = c_bl * tp.vdd ** 2 * 0.5              # avg data activity
     leak = w_drv * INV_LEAK
     return area, delay, energy, leak
 
 
-def column_mux(mux_ratio):
+def column_mux(mux_ratio, tp=None):
     """Pass-gate column mux: delay per stage, area per column."""
+    tp = corners.resolve(tp)
     is_mux = (mux_ratio > 1).astype(jnp.float32) if hasattr(mux_ratio, "astype") \
         else float(mux_ratio > 1)
     stages = jnp.ceil(jnp.log2(jnp.maximum(mux_ratio, 1.0)))
     area_per_col = 0.9 * is_mux
     delay = stages * tech.T_MUX
-    energy = stages * 0.8e-15 * tech.VDD ** 2
+    energy = stages * 0.8e-15 * tp.vdd ** 2
     return area_per_col, delay, energy, 0.2 * INV_LEAK * is_mux
 
 
-def predischarge(rows):
+def predischarge(rows, tp=None):
     """NMOS predischarge of the RBL (GCRAM read port, active-high EN —
     OpenGCRAM adds the extra inverter in the read controller, §4.2)."""
-    return tech.PREDIS_AREA, 25e-12, 0.5e-15 * tech.VDD ** 2, 0.3 * INV_LEAK
+    tp = corners.resolve(tp)
+    return tech.PREDIS_AREA, 25e-12, 0.5e-15 * tp.vdd ** 2, 0.3 * INV_LEAK
 
 
-def precharge(rows):
+def precharge(rows, tp=None):
     """PMOS precharge pair (SRAM differential BLs)."""
-    return tech.PRECH_AREA, 25e-12, 1.0e-15 * tech.VDD ** 2, 0.5 * INV_LEAK
+    tp = corners.resolve(tp)
+    return tech.PRECH_AREA, 25e-12, 1.0e-15 * tp.vdd ** 2, 0.5 * INV_LEAK
 
 
 def dff():
     return tech.DFF_AREA, tech.T_DFF_CQ, tech.E_DFF, 1.2 * INV_LEAK
 
 
-def delay_chain(t_crit):
+def delay_chain(t_crit, tp=None):
     """Timing-closure delay chain: quantizes the cycle to DELAY_STAGE ticks
     (+1 margin stage). This is what produces the paper's sharp frequency drop
     for tall 1:1 arrays (Fig 8a)."""
+    tp = corners.resolve(tp)
     n_stages = jnp.ceil(t_crit / tech.DELAY_STAGE) + 1.0
     t_cycle = n_stages * tech.DELAY_STAGE
     area = n_stages * tech.DELAY_STAGE_AREA
-    energy = n_stages * 1.0e-15 * tech.VDD ** 2
+    energy = n_stages * 1.0e-15 * tp.vdd ** 2
     leak = n_stages * 0.8 * INV_LEAK
     return t_cycle, area, energy, leak
 
 
-def control():
-    return tech.CTRL_AREA, 0.0, 6e-15 * tech.VDD ** 2, 25 * INV_LEAK
+def control(tp=None):
+    tp = corners.resolve(tp)
+    return tech.CTRL_AREA, 0.0, 6e-15 * tp.vdd ** 2, 25 * INV_LEAK

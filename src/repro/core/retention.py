@@ -16,7 +16,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitcells, devices, tech
+from repro.core import bitcells, corners, devices
 
 T_START, T_END, PTS_PER_DECADE = 1e-9, 1e7, 30
 # plain math, not jnp: computing this with jnp.log10 dispatched device work
@@ -28,24 +28,28 @@ def time_grid():
     return jnp.logspace(jnp.log10(T_START), jnp.log10(T_END), N_STEPS + 1)
 
 
-def leak_current(cell: bitcells.BitcellParams, v_sn):
+def leak_current(cell: bitcells.BitcellParams, v_sn, tp=None):
     """Total leakage pulling the stored '1' down [A] (WBL held at 0V worst
-    case: write-device subthreshold + DIBL, plus read-device gate leak)."""
+    case: write-device subthreshold + DIBL, plus read-device gate leak).
+    ``tp`` = operating corner: subthreshold leakage grows with the thermal
+    voltage and the Arrhenius floor, gate leak with ``leak_scale``."""
+    tp = corners.resolve(tp)
     wdev = devices.take_device(bitcells.DEVICE_STACK,
                                cell.write_dev.astype(jnp.int32))
     rdev = devices.take_device(bitcells.DEVICE_STACK,
                                cell.read_dev.astype(jnp.int32))
-    i_sub = devices.mosfet_id(wdev, 0.0, v_sn, cell.w_write)
-    i_gate = rdev.j_gate * cell.w_read * (v_sn / tech.VDD)
+    i_sub = devices.mosfet_id(wdev, 0.0, v_sn, cell.w_write, tp)
+    i_gate = rdev.j_gate * tp.leak_scale * cell.w_read * (v_sn / tp.vdd)
     return i_sub + i_gate
 
 
-def decay_curve(cell: bitcells.BitcellParams, v0):
+def decay_curve(cell: bitcells.BitcellParams, v0, tp=None):
     """V_SN(t) on the log grid via RK4. Returns (ts, vs)."""
+    tp = corners.resolve(tp)
     ts = time_grid()
 
     def f(v):
-        return -leak_current(cell, jnp.maximum(v, 0.0)) / jnp.maximum(
+        return -leak_current(cell, jnp.maximum(v, 0.0), tp) / jnp.maximum(
             cell.c_sn, 1e-18)
 
     def step(v, dt):
@@ -62,7 +66,7 @@ def decay_curve(cell: bitcells.BitcellParams, v0):
 
 
 def read_margin_threshold(cell: bitcells.BitcellParams,
-                          false_read_ratio: float = 0.1):
+                          false_read_ratio: float = 0.1, tp=None):
     """Absolute SN voltage below which a stored '1' starts to conduct the
     (PMOS, gate=SN) read device at > ratio x the stored-'0' current — i.e.
     the point where the '1' reads as '0'.
@@ -70,23 +74,27 @@ def read_margin_threshold(cell: bitcells.BitcellParams,
     This absolute criterion is what makes the WWL level shifter *improve*
     retention (paper Fig 9c): it raises the stored level from VDD-VT to VDD,
     widening the droop window to the same threshold."""
+    tp = corners.resolve(tp)
     rdev = devices.take_device(bitcells.DEVICE_STACK,
                                cell.read_dev.astype(jnp.int32))
-    grid = jnp.linspace(0.0, tech.VDD, 256)
+    grid = jnp.linspace(0.0, tp.vdd, 256)
     # |vgs| of the read device when SN sits at v: VDD - v
-    i_read = devices.mosfet_id(rdev, tech.VDD - grid, tech.VDD, cell.w_read)
-    i_on0 = devices.mosfet_id(rdev, tech.VDD, tech.VDD, cell.w_read)
+    i_read = devices.mosfet_id(rdev, tp.vdd - grid, tp.vdd, cell.w_read, tp)
+    i_on0 = devices.mosfet_id(rdev, tp.vdd, tp.vdd, cell.w_read, tp)
     ok = i_read <= false_read_ratio * i_on0          # high-enough SN region
     # lowest v on the grid that is still a safe '1'
     idx = jnp.argmax(ok)                             # first True
     return grid[idx]
 
 
-def retention_time(cell: bitcells.BitcellParams, level_shift=0):
-    """Seconds until the stored '1' droops below the read-margin threshold."""
-    v0 = bitcells.sn_high_level(cell, level_shift)
-    ts, vs = decay_curve(cell, v0)
-    v_min = read_margin_threshold(cell)
+def retention_time(cell: bitcells.BitcellParams, level_shift=0, tp=None):
+    """Seconds until the stored '1' droops below the read-margin threshold.
+    ``tp`` = operating corner: hotter corners leak harder (shorter
+    retention), higher vdd stores a higher level (longer retention)."""
+    tp = corners.resolve(tp)
+    v0 = bitcells.sn_high_level(cell, level_shift, tp)
+    ts, vs = decay_curve(cell, v0, tp)
+    v_min = read_margin_threshold(cell, tp=tp)
     crossed = vs < v_min
     idx = jnp.argmax(crossed)                       # first crossing (0 if none)
     any_cross = jnp.any(crossed)
@@ -99,12 +107,13 @@ def retention_time(cell: bitcells.BitcellParams, level_shift=0):
     return jnp.where(any_cross, t_cross, ts[-1])
 
 
-def retention_estimate(cell: bitcells.BitcellParams, level_shift=0):
+def retention_estimate(cell: bitcells.BitcellParams, level_shift=0, tp=None):
     """Closed-form sanity estimate t ~ C*dV/I_leak(V0) (first-order; the
     transient solve is more accurate because I_sub varies with V)."""
-    v0 = bitcells.sn_high_level(cell, level_shift)
-    dv = jnp.maximum(v0 - read_margin_threshold(cell), 0.0)
-    i0 = leak_current(cell, v0)
+    tp = corners.resolve(tp)
+    v0 = bitcells.sn_high_level(cell, level_shift, tp)
+    dv = jnp.maximum(v0 - read_margin_threshold(cell, tp=tp), 0.0)
+    i0 = leak_current(cell, v0, tp)
     return cell.c_sn * dv / jnp.maximum(i0, 1e-30)
 
 

@@ -35,8 +35,9 @@ import numpy as np
 from repro.core.select import SelectionPolicy, TaskReq
 from repro.hetero.system import SYSTEM_METRICS, tiles_for
 
-_HETERO_SCHEMA = 2     # 2: truncated also reflects per-bucket caps; budgets
+_HETERO_SCHEMA = 3     # 2: truncated also reflects per-bucket caps; budgets
 #                         pin per-slot argmin rows into the grid
+#                      3: robust (worst-corner) mode keyed into the report
 
 
 def _task_fingerprint(task: TaskReq) -> dict:
@@ -52,14 +53,18 @@ def _task_fingerprint(task: TaskReq) -> dict:
 
 
 def report_key(grid_hash: str, task: TaskReq, policy: SelectionPolicy,
-               compose_policy) -> str:
-    """16-hex cache key over (table grid, task requirement, both policies)."""
+               compose_policy, robust=None) -> str:
+    """16-hex cache key over (table grid, task requirement, both policies,
+    robust mode). The grid hash already covers the operating corners, so a
+    different ``corners=`` list misses; ``robust`` distinguishes worst-case
+    rankings of the same table."""
     payload = json.dumps({
         "schema": _HETERO_SCHEMA,
         "grid": grid_hash,
         "task": _task_fingerprint(task),
         "policy": dataclasses.asdict(policy),
         "compose": dataclasses.asdict(compose_policy),
+        "robust": robust,
     }, sort_keys=True)
     return hashlib.sha256(payload.encode()).hexdigest()[:16]
 
@@ -73,7 +78,7 @@ def save_report(cache_dir: Union[str, Path], report, top_idx: np.ndarray
     """Persist the ranked compositions of ``report`` (row-index matrix
     ``top_idx`` of shape (top_k, n_slots) + per-composition metrics)."""
     key = report_key(report.table.grid_hash, report.task, report.policy,
-                     report.compose_policy)
+                     report.compose_policy, robust=report.robust)
     path = _path(cache_dir, key)
     path.parent.mkdir(parents=True, exist_ok=True)
     meta = {"schema": _HETERO_SCHEMA, "key": key,
@@ -93,12 +98,14 @@ def save_report(cache_dir: Union[str, Path], report, top_idx: np.ndarray
 
 
 def load_report(cache_dir: Union[str, Path], table, task: TaskReq,
-                policy: SelectionPolicy, compose_policy) -> Optional[object]:
+                policy: SelectionPolicy, compose_policy,
+                robust=None) -> Optional[object]:
     """Reconstruct a cached ``CompositionReport`` for these exact inputs, or
     None on miss / unreadable file (the caller then recomputes and re-saves).
     """
     from repro.hetero.compose import CompositionReport, _materialize
-    key = report_key(table.grid_hash, task, policy, compose_policy)
+    key = report_key(table.grid_hash, task, policy, compose_policy,
+                     robust=robust)
     path = _path(cache_dir, key)
     if not path.exists():
         return None
@@ -134,7 +141,8 @@ def load_report(cache_dir: Union[str, Path], table, task: TaskReq,
                              compose_policy=compose_policy, ranked=ranked,
                              n_compositions=int(meta["n_compositions"]),
                              n_feasible=int(meta["n_feasible"]),
-                             truncated=bool(meta["truncated"]))
+                             truncated=bool(meta["truncated"]),
+                             robust=robust)
 
 
 # ---------------------------------------------------------------------------

@@ -140,6 +140,8 @@ class CompositionReport:
     # by trace-replayed energy/latency and every composition's ``metrics``
     # carries the ``sim_*`` keys
     refined: Optional[str] = None
+    # "worst_case" when candidates/scoring priced the per-row worst corner
+    robust: Optional[str] = None
 
     @property
     def best(self) -> Composition:
@@ -294,7 +296,8 @@ def compose(space=None, task=None, policy: Optional[SelectionPolicy] = None,
             compose_policy: Optional[ComposePolicy] = None,
             cache=None, sharded: bool = False,
             refine: Optional[str] = None,
-            sim_policy=None) -> CompositionReport:
+            sim_policy=None, corners=None,
+            robust: Optional[str] = None) -> CompositionReport:
     """Joint heterogeneous composition for one task.
 
     ``space``   MacroConfig list, a built ``DesignTable``, or None for the
@@ -315,6 +318,12 @@ def compose(space=None, task=None, policy: Optional[SelectionPolicy] = None,
                 (``repro.sim``); the simulated report caches beside the
                 analytic one. ``sim_policy`` is a ``repro.sim.SimPolicy``
                 (phases, bins, refresh scheduling, re-rank objective).
+    ``corners`` operating points (``repro.api.OperatingPoint``s / names)
+                batched into the characterization; None = nominal only.
+    ``robust``  ``"worst_case"`` prices candidate feasibility and the system
+                scoring on the per-row worst corner, so the winning
+                composition must hold at EVERY corner; None uses the base
+                (``corners[0]``) columns.
     """
     from repro.api import DesignTable           # runtime: avoids module cycle
     if refine not in (None, "simulate"):
@@ -326,7 +335,7 @@ def compose(space=None, task=None, policy: Optional[SelectionPolicy] = None,
     task = as_task_req(task)
     policy = policy or SelectionPolicy()
     cp = compose_policy or ComposePolicy()
-    table = DesignTable.build(space, cache=cache)
+    table = DesignTable.build(space, cache=cache, corners=corners)
 
     def _refine(report: CompositionReport) -> CompositionReport:
         if refine != "simulate":
@@ -336,11 +345,12 @@ def compose(space=None, task=None, policy: Optional[SelectionPolicy] = None,
 
     if cache is not None:
         from repro.hetero import cache as cache_mod
-        hit = cache_mod.load_report(cache, table, task, policy, cp)
+        hit = cache_mod.load_report(cache, table, task, policy, cp,
+                                    robust=robust)
         if hit is not None:
             return _refine(hit)
 
-    metrics = table.metrics
+    metrics = table.robust_metrics(robust)
     fam_col = table.families
     # candidate lists are ordered by the active objective's tiled slot
     # contribution so per-bucket caps and grid trimming discard the
@@ -383,7 +393,7 @@ def compose(space=None, task=None, policy: Optional[SelectionPolicy] = None,
                                compose_policy=cp, ranked=ranked,
                                n_compositions=int(idx.shape[0]),
                                n_feasible=int(feasible.sum()),
-                               truncated=truncated)
+                               truncated=truncated, robust=robust)
     if cache is not None:
         from repro.hetero import cache as cache_mod
         cache_mod.save_report(cache, report, idx[top])

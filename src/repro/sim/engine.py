@@ -88,6 +88,11 @@ class SimPolicy:
                          is ``ComposePolicy.top_k`` — the re-rank replays
                          exactly the compositions the analytic report
                          materialized.
+    ``corner``           operating-corner label (e.g. "hot") whose
+                         ``retention_s@<corner>`` column drives refresh
+                         intervals, expiry rewrites, and the retention wall
+                         — requires a corner-batched DesignTable; None uses
+                         the base ``retention_s``.
     """
     phases: Tuple[str, ...] = ("prefill", "decode")
     duration_s: float = 1e-3
@@ -96,6 +101,7 @@ class SimPolicy:
     refresh_margin: float = refresh_mod.DEFAULT_REFRESH_MARGIN
     rewrite_overhead: float = 2.0
     objective: str = "energy"
+    corner: Optional[str] = None
 
     def __post_init__(self):
         if self.objective not in ("energy", "latency", "edp"):
@@ -198,6 +204,11 @@ _backend.register("sim_replay", xla=_sim_grid_xla,
 def _gather_params(cols: Mapping[str, np.ndarray], idx: np.ndarray,
                    cap_bits: np.ndarray,
                    policy: SimPolicy) -> Dict[str, jnp.ndarray]:
+    if policy.corner is not None:
+        # schedule refresh / expiry off the named corner's retention column
+        cols = {**cols,
+                "retention_s": refresh_mod.retention_column(
+                    cols, policy.corner)}
     safe = jnp.maximum(jnp.asarray(np.asarray(idx), jnp.int32), 0)
     missing = [c for c in SIM_COLS if c not in cols]
     if missing:

@@ -36,13 +36,32 @@ def refresh_interval_s(retention_s, margin: float = DEFAULT_REFRESH_MARGIN):
     return margin * retention_s
 
 
+def retention_column(metrics: Mapping[str, np.ndarray],
+                     corner: str = None) -> np.ndarray:
+    """The retention column [s] refresh scheduling should derive from:
+    the base ``retention_s`` when ``corner`` is None, else the per-corner
+    ``retention_s@<corner>`` column of a corner-batched DesignTable — a
+    refresh schedule sized for the *hot* corner keeps data alive at
+    temperature, where the nominal solver retention would under-refresh."""
+    if corner is None:
+        return np.asarray(metrics["retention_s"], np.float64)
+    key = f"retention_s@{corner}"
+    if key not in metrics:
+        raise KeyError(
+            f"retention column {key!r} not in metrics; build the "
+            f"DesignTable with corners=[...] including the {corner!r} "
+            f"operating point")
+    return np.asarray(metrics[key], np.float64)
+
+
 def refresh_intervals(metrics: Mapping[str, np.ndarray],
-                      margin: float = DEFAULT_REFRESH_MARGIN) -> np.ndarray:
+                      margin: float = DEFAULT_REFRESH_MARGIN,
+                      corner: str = None) -> np.ndarray:
     """Per-row refresh intervals [s] for a DesignTable metric dict — the
     solver parity anchor: ``refresh_intervals(table.metrics) ==
-    margin * table.metrics["retention_s"]`` by construction."""
-    return refresh_interval_s(
-        np.asarray(metrics["retention_s"], np.float64), margin)
+    margin * table.metrics["retention_s"]`` by construction. ``corner``
+    schedules from that corner's retention column instead (e.g. "hot")."""
+    return refresh_interval_s(retention_column(metrics, corner), margin)
 
 
 def refresh_ops(num_words, interval_s, occupancy, t_bin_s):

@@ -125,7 +125,8 @@ def simulate_report(report: CompositionReport,
     key = None
     if cache is not None:
         base = hcache.report_key(report.table.grid_hash, report.task,
-                                 report.policy, report.compose_policy)
+                                 report.policy, report.compose_policy,
+                                 robust=report.robust)
         key = hcache.sim_report_key(base, policy,
                                     [t.fingerprint() for t in traces])
         hit = hcache.load_sim_report(cache, key, n_ranked=len(report.ranked))

@@ -1,10 +1,22 @@
 """Graceful degradation for the optional ``hypothesis`` dev dependency.
 
 ``from _hypothesis_compat import given, settings, st`` behaves exactly like
-the real hypothesis import when it is installed; when it is not
-(``pip install -e .[dev]`` adds it), ``@given(...)`` turns into a per-test
-skip marker so the plain unit tests in the same module still run.
+the real hypothesis import when it is installed (``pip install -e .[dev]``
+adds it). When it is not, ``@given(...)`` degrades to a *bounded-example*
+runner instead of a skip: each supported strategy contributes a small
+deterministic set of representative draws (endpoints + an interior point),
+and the test body runs once per combination (capped). Property tests
+therefore still exercise their invariants on every CI/dev box — hypothesis
+only adds shrinking and randomized breadth on top.
+
+Strategies the fallback understands: ``st.floats(min, max)``,
+``st.integers(min, max)``, ``st.sampled_from(seq)``, ``st.booleans()``,
+``st.just(x)``. A test using any *other* strategy skips (as before) rather
+than running with made-up inputs.
 """
+import inspect
+import itertools
+
 import pytest
 
 try:
@@ -13,19 +25,83 @@ try:
 except ImportError:
     HAVE_HYPOTHESIS = False
 
-    class _AnyStrategy:
-        """Stands in for hypothesis.strategies: every strategy is a no-op."""
+    # hard cap on fallback combinations per test (full cross-products of
+    # many-valued strategies would otherwise explode)
+    _MAX_FALLBACK_EXAMPLES = 25
+
+    class _Examples:
+        """A bounded, deterministic stand-in for one hypothesis strategy."""
+
+        def __init__(self, values):
+            self.values = list(values)
+
+    class _St:
+        """Stands in for ``hypothesis.strategies``: known strategies return
+        bounded example sets; unknown ones return None (-> skip)."""
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_k):
+            lo, hi = float(min_value), float(max_value)
+            return _Examples([lo, lo + 0.381966 * (hi - lo), hi])
+
+        @staticmethod
+        def integers(min_value=0, max_value=100, **_k):
+            lo, hi = int(min_value), int(max_value)
+            mid = (lo + hi) // 2
+            return _Examples(sorted({lo, mid, hi}))
+
+        @staticmethod
+        def sampled_from(seq):
+            return _Examples(seq)
+
+        @staticmethod
+        def booleans():
+            return _Examples([False, True])
+
+        @staticmethod
+        def just(value):
+            return _Examples([value])
 
         def __getattr__(self, name):
-            return lambda *a, **k: None
+            return lambda *a, **k: None          # unsupported -> skip
 
-    st = _AnyStrategy()
+    st = _St()
 
-    def given(*_a, **_k):
-        return pytest.mark.skip(
-            reason="hypothesis not installed (pip install -e .[dev])")
+    def given(*arg_strats, **kw_strats):
+        strats = list(arg_strats) + list(kw_strats.values())
+        if not all(isinstance(s, _Examples) for s in strats):
+            return pytest.mark.skip(
+                reason="hypothesis not installed and no bounded-example "
+                       "fallback for this strategy (pip install -e .[dev])")
+
+        def deco(fn):
+            names = list(kw_strats)
+
+            def wrapper():
+                combos = itertools.islice(
+                    itertools.product(*(s.values for s in strats)),
+                    _MAX_FALLBACK_EXAMPLES)
+                for combo in combos:
+                    pos = combo[:len(arg_strats)]
+                    kw = dict(zip(names, combo[len(arg_strats):]))
+                    fn(*pos, **kw)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__module__ = fn.__module__
+            wrapper.__doc__ = fn.__doc__
+            # hide the example parameters from pytest's fixture resolution
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco
 
     class settings:  # noqa: N801 - mirrors hypothesis.settings
+        def __init__(self, *_a, **_k):
+            pass
+
+        def __call__(self, fn):                  # @settings(...) passthrough
+            return fn
+
         @staticmethod
         def register_profile(*_a, **_k):
             pass

@@ -6,3 +6,12 @@ from pathlib import Path
 # and benches must see 1 device; only launch/dryrun.py forces 512.
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="regenerate tests/golden/table2.json from the live physics "
+             "instead of diffing against it (equivalent to running "
+             "scripts/update_golden.py); commit the result only after an "
+             "intentional physics change")

@@ -1,0 +1,355 @@
+"""Operating-corner physics: TechParams derivation + nominal parity,
+voltage/temperature monotonicity properties, corner-batched DesignTable,
+corner-robust DSE, the hot-corner simulator path, and the stale-cache
+rejection."""
+import json
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro import api
+from repro.api import (Compiler, DesignTable, MacroConfig, OperatingPoint,
+                       SimPolicy, TechParams, compose, explore)
+from repro.core import bitcells, corners, retention, tech
+from repro.sim import refresh
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+HOT, NOMINAL = corners.HOT, corners.NOMINAL
+
+
+def small_space():
+    return api.design_space(word_sizes=(16, 32), num_words=(32, 64))
+
+
+@pytest.fixture(scope="module")
+def corner_table():
+    return DesignTable.from_configs(small_space(), corners=[NOMINAL, HOT])
+
+
+# jitted per-corner retention probe: one compile, many corners
+_CELL = bitcells.BITCELLS["gc_ossi"]
+_ret_at = jax.jit(lambda tp: retention.retention_time(_CELL, 0, tp))
+
+
+def _retention_s(op: OperatingPoint) -> float:
+    return float(_ret_at(TechParams.from_op(op)))
+
+
+# ------------------------------------------------------------ TechParams
+def test_nominal_techparams_reproduces_legacy_constants():
+    tp = TechParams.from_op(NOMINAL)
+    assert tp == TechParams()                      # the all-defaults object
+    assert tp.vdd == tech.VDD and tp.vdd_boost == tech.VDD_BOOST
+    assert tp.ut == tech.UT and tp.temp_k == tech.TEMP_K
+    assert tp.leak_scale == 1.0 and tp.drive_scale == 1.0
+    assert tp.v_sense == tech.V_SENSE
+    assert tp.v_sense_sram == tech.V_SENSE_SRAM
+    assert hash(tp) == hash(TechParams())          # hashable (cache keys)
+
+
+def test_techparams_scales_move_the_right_way():
+    hot = TechParams.from_op(HOT)
+    cold = TechParams.from_op(corners.COLD)
+    assert hot.ut > tech.UT > cold.ut              # kT/q linear in T
+    assert hot.leak_scale > 1.0 > cold.leak_scale  # Arrhenius
+    assert hot.drive_scale < 1.0 < cold.drive_scale  # mobility ~ T^-1.5
+    lv = TechParams.from_op(corners.LOW_VDD)
+    assert lv.vdd_boost < tech.VDD_BOOST and lv.v_sense < tech.V_SENSE
+
+
+def test_operating_point_coercion_and_validation():
+    assert corners.as_operating_point("hot") is HOT
+    op = corners.as_operating_point((1.0, 330.0))
+    assert op.vdd == 1.0 and op.temp_k == 330.0
+    with pytest.raises(KeyError):
+        corners.as_operating_point("nosuch")
+    with pytest.raises(ValueError):
+        OperatingPoint(vdd=-1.0)
+    with pytest.raises(ValueError):
+        corners.as_corners([NOMINAL, OperatingPoint(corner="nominal",
+                                                    temp_k=310.0)])
+    assert corners.as_corners(None) == (NOMINAL,)
+
+
+def test_nominal_corner_column_matches_plain_batch():
+    """The corner grid's nominal column must agree with the default path to
+    float32 round-off (the default path folds the nominal constants at
+    trace time; the batched corner axis evaluates them as traced f32, so
+    individual energy terms may differ by an ulp). The *default* path's
+    bit-for-bit parity is proved separately by tests/test_golden.py."""
+    import jax.numpy as jnp
+    from repro.core import characterize as chz
+    vecs = jnp.stack([c.to_vector() for c in small_space()[:8]])
+    plain = chz.characterize_batch(vecs)
+    grid = chz.characterize_corners(vecs, [NOMINAL, HOT])
+    for k in plain:
+        a = np.asarray(plain[k])
+        b = np.asarray(grid[k])[:, 0]
+        np.testing.assert_allclose(a, b, rtol=1e-6, err_msg=f"metric {k}")
+
+
+# ------------------------------------------------ physics monotonicity
+@given(temp_k=st.floats(260.0, 370.0))
+def test_retention_monotone_decreasing_in_temperature(temp_k):
+    t_lo = _retention_s(OperatingPoint(temp_k=temp_k, corner="a"))
+    t_hi = _retention_s(OperatingPoint(temp_k=temp_k + 20.0, corner="b"))
+    assert t_hi < t_lo
+
+
+@given(vdd=st.floats(0.9, 1.25))
+def test_retention_monotone_nondecreasing_in_vdd(vdd):
+    t_lo = _retention_s(OperatingPoint(vdd=vdd, corner="a"))
+    t_hi = _retention_s(OperatingPoint(vdd=vdd + 0.05, corner="b"))
+    assert t_hi >= t_lo * (1.0 - 1e-6)
+
+
+def test_hot_corner_shortens_gcram_retention_measurably():
+    t_nom = _retention_s(NOMINAL)
+    t_hot = _retention_s(HOT)
+    assert t_hot < 0.5 * t_nom      # 358 K cuts OS-Si retention >2x (it's ~13x)
+
+
+@given(retention_s=st.floats(1e-6, 10.0), margin=st.floats(0.1, 0.9))
+def test_refresh_interval_monotone_in_retention_and_margin(retention_s,
+                                                          margin):
+    base = refresh.refresh_interval_s(retention_s, margin)
+    assert refresh.refresh_interval_s(retention_s * 2.0, margin) >= base
+    assert refresh.refresh_interval_s(retention_s, min(margin + 0.05, 1.0)) \
+        >= base
+    assert base == pytest.approx(margin * retention_s)
+
+
+# ------------------------------------------------ DesignTable invariants
+@given(objectives=st.sampled_from([("area_um2", "p_leak_w"),
+                                   ("area_um2", "p_leak_w", "t_read_s"),
+                                   ("e_read_j", "-retention_s")]))
+def test_pareto_rows_mutually_nondominated(objectives):
+    table = DesignTable.from_configs(small_space())
+    front = table.pareto(*objectives)
+    cols = []
+    for name in objectives:
+        sign = -1.0 if name.startswith("-") else 1.0
+        cols.append(sign * np.asarray(front[name.lstrip("-")], np.float64))
+    pts = np.stack(cols, axis=1)
+    for i in range(len(pts)):
+        for j in range(len(pts)):
+            if i != j:
+                assert not (np.all(pts[j] <= pts[i])
+                            and np.any(pts[j] < pts[i])), \
+                    f"front row {i} dominated by {j} under {objectives}"
+
+
+@given(f_hz=st.sampled_from([2e8, 1e9, 3e9]),
+       lifetime_s=st.sampled_from([1e-6, 1e-3, 1.0]))
+def test_feasible_is_subset_of_table(f_hz, lifetime_s):
+    table = DesignTable.from_configs(small_space())
+    feas = table.feasible(f_hz, lifetime_s)
+    assert len(feas) <= len(table)
+    all_cfgs = table.to_configs()
+    assert all(c in all_cfgs for c in feas.to_configs())
+    mask = table.shmoo(f_hz, lifetime_s)
+    assert len(feas) == int(mask.sum())
+
+
+# ------------------------------------------------ corner-batched tables
+def test_corner_table_columns_and_worst_case(corner_table):
+    t = corner_table
+    assert t.corners == (NOMINAL, HOT)
+    assert "retention_s@hot" in t.metric_names
+    assert "f_op_hz@nominal" in t.metric_names
+    gc = t["mem_type"] != "sram6t"
+    assert np.all(t["retention_s@hot"][gc] < t["retention_s@nominal"][gc])
+    # base columns come from corners[0] == nominal
+    np.testing.assert_array_equal(t["retention_s"], t["retention_s@nominal"])
+    wc = t.worst_case_metrics()
+    assert np.all(wc["retention_s"] <= t["retention_s"])
+    assert np.all(wc["p_leak_w"] >= t["p_leak_w"])
+    np.testing.assert_array_equal(wc["bits"], t["bits"])   # geometry passthru
+    cm = t.corner_metrics("hot")
+    np.testing.assert_array_equal(cm["retention_s"], t["retention_s@hot"])
+    with pytest.raises(KeyError):
+        t.corner_metrics("cold")
+
+
+def test_corner_table_roundtrip_and_grid_hash(tmp_path, corner_table):
+    path = corner_table.save(tmp_path / "t.npz")
+    t2 = DesignTable.load(path)
+    assert t2.corners == corner_table.corners
+    np.testing.assert_array_equal(t2["retention_s@hot"],
+                                  corner_table["retention_s@hot"])
+    assert t2.grid_hash == corner_table.grid_hash
+    cfgs = small_space()
+    assert api.grid_hash(cfgs) != api.grid_hash(cfgs, corners=[NOMINAL, HOT])
+    plain = DesignTable.from_configs(cfgs)
+    assert plain.grid_hash != corner_table.grid_hash
+    # filter keeps the corner axis
+    assert corner_table.filter(corner_table["bits"] > 0).corners \
+        == corner_table.corners
+
+
+def test_build_rejects_conflicting_corners(corner_table):
+    with pytest.raises(ValueError):
+        DesignTable.build(corner_table, corners=[NOMINAL])
+    # matching corners pass through
+    assert DesignTable.build(corner_table, corners=[NOMINAL, HOT]) \
+        is corner_table
+
+
+# ------------------------------------------------------ corner-robust DSE
+def _req(f_hz, lifetime_s, cap_kb=64):
+    from repro.core.select import Bucket, LevelReq
+    return LevelReq("L1", cap_kb * 8 * 1024, (Bucket(1.0, f_hz, lifetime_s),))
+
+
+def test_robust_explore_picks_survive_every_corner(corner_table):
+    task = {"task_id": "t", "name": "t", "L1": _req(0.4e9, 5e-3)}
+    rep = explore(space=corner_table, tasks=[task], robust="worst_case")
+    assert rep.robust == "worst_case"
+    sel = rep.selections["t"]["L1"]
+    assert sel.feasible
+    for pick in sel.picks:
+        i = pick.config_idx
+        for lbl in corner_table.corner_labels:
+            assert corner_table[f"f_op_hz@{lbl}"][i] >= 0.4e9
+            assert corner_table[f"retention_s@{lbl}"][i] >= 5e-3
+    # the same requirement at nominal-only admits a GCRAM pick that the hot
+    # corner disqualifies (corner-blind DSE crowns an infeasible winner)
+    nom = explore(space=corner_table, tasks=[task])
+    i_nom = nom.selections["t"]["L1"].picks[0].config_idx
+    assert corner_table["retention_s"][i_nom] >= 5e-3
+    assert corner_table["retention_s@hot"][i_nom] < 5e-3
+    assert nom.selections["t"]["L1"].label != sel.label
+
+
+def test_worst_case_passes_through_derived_columns(corner_table):
+    t2 = corner_table.with_column(
+        "p_static_w", corner_table["p_leak_w"] + corner_table["p_refresh_w"])
+    wc = t2.worst_case_metrics()         # must not KeyError on the derived col
+    np.testing.assert_array_equal(wc["p_static_w"], t2["p_static_w"])
+    assert np.all(wc["retention_s"] <= t2["retention_s"])
+
+
+def test_low_vdd_corner_cuts_switching_energy():
+    from repro.core import periphery
+    tp = TechParams.from_op(corners.LOW_VDD)
+    _, _, e_nom, _ = periphery.sense_amp()
+    _, _, e_lv, _ = periphery.sense_amp(tp=tp)
+    assert float(e_lv) < float(e_nom)    # sense op is CV^2-class
+    m_nom = Compiler().compile(mem_type="gc_sisi", word_size=32, num_words=64)
+    m_lv = Compiler().compile(mem_type="gc_sisi", word_size=32, num_words=64,
+                              op=corners.LOW_VDD)
+    assert m_lv.ppa["e_read_j"] < m_nom.ppa["e_read_j"]
+
+
+def test_compiler_simulate_accepts_corners_and_robust(tmp_path):
+    task = {"task_id": "t", "name": "t", "L1": _req(0.4e9, 5e-3)}
+    rep = Compiler().simulate(task, space=small_space(),
+                              corners=[NOMINAL, HOT], robust="worst_case")
+    assert rep.refined == "simulate" and rep.robust == "worst_case"
+    assert rep.table.corners == (NOMINAL, HOT)
+
+
+def test_robust_compose_matches_explore_winner(corner_table):
+    task = {"task_id": "t", "name": "t", "L1": _req(0.4e9, 5e-3)}
+    rep_x = explore(space=corner_table, tasks=[task], robust="worst_case")
+    rep_c = compose(corner_table, task, robust="worst_case")
+    assert rep_c.robust == "worst_case"
+    assert rep_c.labels()["L1"] == rep_x.selections["t"]["L1"].label
+    with pytest.raises(ValueError):
+        corner_table.robust_metrics("nosuch")
+
+
+def test_robust_compose_cache_roundtrip(tmp_path, corner_table):
+    from repro.hetero.system import composition_eval_count
+    task = {"task_id": "t", "name": "t", "L1": _req(0.4e9, 5e-3)}
+    cfgs = small_space()
+    r1 = compose(cfgs, task, cache=tmp_path, corners=[NOMINAL, HOT],
+                 robust="worst_case")
+    n = composition_eval_count()
+    r2 = compose(cfgs, task, cache=tmp_path, corners=[NOMINAL, HOT],
+                 robust="worst_case")
+    assert composition_eval_count() == n, "robust cache hit must not rescore"
+    assert r2.labels() == r1.labels() and r2.robust == "worst_case"
+    # robust=None is a different cache entry AND a different ranking input
+    r3 = compose(cfgs, task, cache=tmp_path, corners=[NOMINAL, HOT])
+    assert composition_eval_count() == n + 1
+    assert r3.robust is None
+
+
+# ---------------------------------------------------- simulator hot corner
+def test_sim_refresh_intervals_follow_hot_corner(corner_table):
+    m = corner_table.metrics
+    base = refresh.refresh_intervals(m)
+    hot = refresh.refresh_intervals(m, corner="hot")
+    gc = corner_table["mem_type"] != "sram6t"
+    assert np.all(hot[gc] < base[gc])
+    with pytest.raises(KeyError):
+        refresh.refresh_intervals(DesignTable.from_configs(
+            small_space()).metrics, corner="hot")
+
+
+def test_simulate_hot_corner_pays_more_refresh(corner_table):
+    task = {"task_id": "t", "name": "t", "L1": _req(0.4e9, 5e-3)}
+    r_nom = Compiler().simulate(task, space=corner_table)
+    r_hot = Compiler().simulate(task, space=corner_table,
+                                sim_policy=SimPolicy(corner="hot"))
+    e_nom = r_nom.best.metrics["sim_e_refresh_j"] \
+        + r_nom.best.metrics["sim_e_rewrite_j"]
+    e_hot = r_hot.best.metrics["sim_e_refresh_j"] \
+        + r_hot.best.metrics["sim_e_rewrite_j"]
+    assert e_hot > e_nom     # shorter intervals -> more refresh/rewrite energy
+    # a nominal-only table cannot serve a hot-corner schedule
+    with pytest.raises(KeyError):
+        Compiler().simulate(task, space=DesignTable.from_configs(
+            small_space()), sim_policy=SimPolicy(corner="hot"))
+
+
+def test_compile_at_corner():
+    m_nom = Compiler().compile(mem_type="gc_ossi", word_size=16, num_words=32)
+    m_hot = Compiler().compile(mem_type="gc_ossi", word_size=16, num_words=32,
+                               op=HOT)
+    assert m_hot.retention_s < m_nom.retention_s
+    # shorter retention -> the refresh power the analytic model prices rises
+    assert m_hot.ppa["p_refresh_w"] > m_nom.ppa["p_refresh_w"]
+
+
+# ------------------------------------------------------ stale-cache guard
+def _tamper_meta(path, **patch):
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        payload = {k: z[k] for k in z.files if k != "__meta__"}
+    meta.update(patch)
+    np.savez(path, __meta__=json.dumps(meta), **payload)
+
+
+def test_load_rejects_stale_physics_fingerprint(tmp_path):
+    table = DesignTable.from_configs(small_space())
+    path = table.save(tmp_path / "t.npz")
+    assert DesignTable.load(path).grid_hash == table.grid_hash  # fresh: loads
+    _tamper_meta(path, physics="deadbeefdeadbeef")
+    with pytest.raises(ValueError, match="stale physics fingerprint"):
+        DesignTable.load(path)
+
+
+def test_build_reports_and_rebuilds_stale_cache(tmp_path):
+    cfgs = small_space()
+    table = DesignTable.build(cfgs, cache=tmp_path)
+    cache_file = tmp_path / f"table_{api.grid_hash(cfgs)}.npz"
+    assert cache_file.exists()
+    _tamper_meta(cache_file, physics="deadbeefdeadbeef")
+    n = api.characterize_call_count()
+    with pytest.warns(RuntimeWarning, match="stale physics fingerprint"):
+        t2 = DesignTable.build(cfgs, cache=tmp_path)
+    assert api.characterize_call_count() == n + 1, \
+        "stale cache must be re-characterized, not reused"
+    np.testing.assert_array_equal(t2["f_op_hz"], table["f_op_hz"])
+    # and the rebuild healed the cache file
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        DesignTable.build(cfgs, cache=tmp_path)

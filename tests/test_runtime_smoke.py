@@ -1,0 +1,159 @@
+"""Smoke/unit tests for the runtime modules: ``data.pipeline`` determinism
+and state round-trip, ``serve.engine`` construction + one generation request,
+and ``runtime.supervisor`` checkpoint/restart/straggler behaviour — each
+constructed fresh, run for one step/request, shapes asserted, and no
+warnings raised from repro code."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.configs import get_config, reduce_config
+from repro.data.pipeline import DataState, SyntheticLMData
+from repro.runtime.supervisor import Supervisor, SupervisorConfig
+from repro.serve.engine import (Engine, make_decode_step, make_prefill_step,
+                                sample_greedy, sample_temperature)
+
+
+def tiny_cfg():
+    return reduce_config(get_config("internlm2-1.8b")).replace(num_layers=1)
+
+
+def _assert_no_repro_warnings(records):
+    ours = [w for w in records if "repro" in (w.filename or "")]
+    assert not ours, [str(w.message) for w in ours]
+
+
+# ------------------------------------------------------------ data.pipeline
+def test_pipeline_batches_are_pure_functions_of_seed_and_step(recwarn):
+    cfg = tiny_cfg()
+    a = SyntheticLMData(cfg, batch_size=4, seq_len=16, seed=7)
+    b = SyntheticLMData(cfg, batch_size=4, seq_len=16, seed=7)
+    ba, bb = a.next_batch(), b.next_batch()
+    assert ba["tokens"].shape == (4, 16) and ba["tokens"].dtype == np.int32
+    assert np.all((ba["tokens"] >= 0) & (ba["tokens"] < cfg.vocab_size))
+    np.testing.assert_array_equal(ba["tokens"], bb["tokens"])
+    # a different seed diverges, a different step diverges
+    other = SyntheticLMData(cfg, batch_size=4, seq_len=16, seed=8)
+    assert not np.array_equal(other.next_batch()["tokens"], ba["tokens"])
+    assert not np.array_equal(a.next_batch()["tokens"], ba["tokens"])
+    _assert_no_repro_warnings(recwarn.list)
+
+
+def test_pipeline_state_roundtrip_resumes_exact_stream():
+    cfg = tiny_cfg()
+    a = SyntheticLMData(cfg, batch_size=2, seq_len=8, seed=3)
+    a.next_batch()
+    a.next_batch()
+    saved = a.state.to_dict()
+    expected = a.next_batch()
+
+    # same construction seed (the bigram map is built at construction; the
+    # supervisor's restore path re-seats state on the same pipeline object)
+    resumed = SyntheticLMData(cfg, batch_size=2, seq_len=8, seed=3)
+    resumed.state = DataState.from_dict(saved)
+    np.testing.assert_array_equal(resumed.next_batch()["tokens"],
+                                  expected["tokens"])
+
+
+# -------------------------------------------------------------- serve.engine
+def test_engine_one_generation_request(recwarn):
+    cfg = tiny_cfg()
+    lm, prefill = make_prefill_step(cfg, max_seq=32)
+    params = lm.init(jax.random.key(0))
+    cache, logits = jax.jit(prefill)(params,
+                                     {"tokens": jnp.zeros((2, 4), jnp.int32)})
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab_size
+
+    eng = Engine(cfg, params, max_seq=32)
+    out = eng.generate({"tokens": jnp.zeros((2, 4), jnp.int32)}, steps=3)
+    assert out.shape == (2, 3) and out.dtype == np.int32
+    assert np.all((out >= 0) & (out < cfg.vocab_size))
+    # greedy decoding is deterministic request-to-request
+    out2 = eng.generate({"tokens": jnp.zeros((2, 4), jnp.int32)}, steps=3)
+    np.testing.assert_array_equal(out, out2)
+    # temperature path samples valid ids
+    out_t = eng.generate({"tokens": jnp.zeros((2, 4), jnp.int32)}, steps=2,
+                         temperature=0.8, seed=1)
+    assert out_t.shape == (2, 2)
+    assert np.all((out_t >= 0) & (out_t < cfg.vocab_size))
+    _assert_no_repro_warnings(recwarn.list)
+
+
+def test_samplers():
+    logits = jnp.asarray([[0.1, 3.0, -1.0], [2.0, 0.0, 1.0]])
+    np.testing.assert_array_equal(np.asarray(sample_greedy(logits)), [1, 0])
+    tok = sample_temperature(jax.random.key(0), logits, temperature=0.5)
+    assert tok.shape == (2,) and tok.dtype == jnp.int32
+
+
+# ------------------------------------------------------- runtime.supervisor
+class _CountingData:
+    """Minimal data source with the pipeline's state contract."""
+
+    def __init__(self):
+        self.state = DataState(seed=0, step=0)
+
+    def next_batch(self):
+        self.state.step += 1
+        return {"x": np.full((2,), float(self.state.step), np.float32)}
+
+
+def _step_fn(params, opt_state, batch, step):
+    loss = jnp.mean(batch["x"]) * 0.0 + 1.0 / (step + 1.0)
+    return params, opt_state, {"loss": loss}
+
+
+def _run(tmp_path, total_steps=4, **sup_kw):
+    ckpt = Checkpointer(tmp_path / "ckpt", async_write=False)
+    sup = Supervisor(_step_fn, ckpt,
+                     cfg=SupervisorConfig(ckpt_every=2, max_restarts=2),
+                     **sup_kw)
+    params = {"w": jnp.zeros((2,), jnp.float32)}
+    opt = {"m": jnp.zeros((2,), jnp.float32)}
+    return sup.run(params, opt, _CountingData(), total_steps=total_steps)
+
+
+def test_supervisor_clean_run_checkpoints_and_reports(tmp_path, recwarn):
+    params, opt, report = _run(tmp_path)
+    assert report.steps_run == 4 and report.restarts == 0
+    assert len(report.losses) == 4 and len(report.heartbeats) == 4
+    assert np.all(np.isfinite(report.losses))
+    ckpt = Checkpointer(tmp_path / "ckpt", async_write=False)
+    assert ckpt.latest_step() == 4          # final-step checkpoint landed
+    _assert_no_repro_warnings(recwarn.list)
+
+
+def test_supervisor_restarts_from_latest_checkpoint(tmp_path):
+    tripped = []
+
+    def fail_once(step):
+        if step == 3 and not tripped:
+            tripped.append(step)
+            raise RuntimeError("injected fault")
+
+    params, opt, report = _run(tmp_path, failure_injector=fail_once)
+    assert tripped == [3]
+    assert report.restarts == 1
+    assert report.steps_run >= 4            # re-ran the failed step
+
+
+def test_supervisor_gives_up_after_max_restarts(tmp_path):
+    def always_fail(step):
+        raise RuntimeError("persistent fault")
+
+    with pytest.raises(RuntimeError, match="persistent fault"):
+        _run(tmp_path, failure_injector=always_fail)
+
+
+def test_supervisor_flags_stragglers(tmp_path):
+    def slow_at(step):
+        return 0.25 if step == 8 else 0.0
+
+    params, opt, report = _run(tmp_path, total_steps=10,
+                               straggler_injector=slow_at)
+    assert 8 in report.straggler_events
+    assert report.steps_run == 10
