@@ -1,117 +1,52 @@
 #!/usr/bin/env python
-"""Fail on broken intra-repo links/anchors in docs/*.md + README.md.
+"""Standalone docs gate: broken links/anchors + analyzer rule-catalog sync.
 
-Checks every markdown link `[text](target)`:
-
-  - external targets (http/https/mailto) are ignored,
-  - relative file targets must exist (resolved against the containing file),
-  - `#anchor` fragments must match a heading in the target file, using
-    GitHub's slug rules (lowercase; strip punctuation except hyphens;
-    spaces → hyphens; duplicate slugs get -1, -2, ... suffixes).
-
-Fenced code blocks are stripped before scanning so code samples containing
-bracket syntax don't produce false positives.
+Thin wrapper over the DC checkers of ``repro.analysis`` — the single source
+of truth for the link/anchor/rule-doc logic lives in
+``src/repro/analysis/docs.py`` (and the rule registry in
+``src/repro/analysis/rules.py``). Both are stdlib-only with no intra-package
+imports, so this script loads them via importlib straight off the source
+tree: it works in bare checkouts and pre-commit hooks where the ``repro``
+package is not installed.
 
     python scripts/check_docs.py [files...]     # default: docs/*.md README.md
 
-Exit status 0 = all links resolve; 1 = broken links (listed on stderr).
+Exit status 0 = all links resolve and every rule ID is documented; 1
+otherwise (findings listed on stderr). The full analyzer (same checks plus
+CK/JP/US/BK) is ``python -m repro.analysis --docs``.
 """
 from __future__ import annotations
 
-import functools
-import re
+import importlib.util
 import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parents[1]
 
-_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
-_FENCE = re.compile(r"^(```|~~~).*?^\1\s*$", re.M | re.S)
-_HEADING = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$", re.M)
-_EXTERNAL = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")  # http:, mailto:, ...
 
-
-def _rel(path: Path) -> str:
-    try:
-        return str(path.relative_to(REPO))
-    except ValueError:
-        return str(path)
-
-
-def slugify(heading: str) -> str:
-    """GitHub-style anchor slug for one heading line (underscores are
-    preserved — GitHub keeps them in anchors, and this repo's API docs use
-    snake_case headings)."""
-    # drop inline code/emphasis markers and links, keep their text
-    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)
-    text = text.replace("`", "").replace("*", "").strip().lower()
-    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
-    return text.replace(" ", "-")
-
-
-@functools.lru_cache(maxsize=None)
-def anchors_of(path: Path) -> frozenset:
-    """All heading anchors of a markdown file, with -N duplicate suffixes."""
-    body = _FENCE.sub("", path.read_text(encoding="utf-8"))
-    seen: dict = {}
-    out = set()
-    for m in _HEADING.finditer(body):
-        slug = slugify(m.group(1))
-        n = seen.get(slug, 0)
-        seen[slug] = n + 1
-        out.add(slug if n == 0 else f"{slug}-{n}")
-    return frozenset(out)
-
-
-def check_file(path: Path):
-    """``(broken-link descriptions, total links)`` for one markdown file."""
-    errors = []
-    n_links = 0
-    body = _FENCE.sub("", path.read_text(encoding="utf-8"))
-    for m in _LINK.finditer(body):
-        n_links += 1
-        target = m.group(1)
-        if _EXTERNAL.match(target):
-            continue
-        file_part, _, anchor = target.partition("#")
-        dest = path if not file_part else (
-            path.parent / file_part).resolve()
-        if not dest.exists():
-            errors.append(f"{_rel(path)}: broken link "
-                          f"'{target}' (no such file {file_part})")
-            continue
-        if anchor:
-            if dest.suffix.lower() not in (".md", ".markdown"):
-                continue                      # anchors into non-md: skip
-            if anchor not in anchors_of(dest):
-                errors.append(
-                    f"{_rel(path)}: broken anchor '{target}' "
-                    f"(no heading slug '#{anchor}' in {_rel(dest)})")
-    return errors, n_links
+def _load(name: str):
+    path = REPO / "src" / "repro" / "analysis" / f"{name}.py"
+    spec = importlib.util.spec_from_file_location(f"_check_docs_{name}", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
 
 
 def main(argv=None) -> int:
     args = (argv if argv is not None else sys.argv[1:])
-    if args:
-        files = [Path(a).resolve() for a in args]
-    else:
-        files = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
-    missing = [f for f in files if not f.exists()]
-    errors = [f"no such file: {f}" for f in missing]
-    n_links = 0
-    for f in files:
-        if f in missing:
-            continue
-        errs, n = check_file(f)
-        errors.extend(errs)
-        n_links += n
-    if errors:
-        for e in errors:
-            print(f"ERROR: {e}", file=sys.stderr)
-        print(f"{len(errors)} broken link(s) across {len(files)} file(s)",
-              file=sys.stderr)
+    docs = _load("docs")
+    rules = _load("rules")
+    files = [Path(a).resolve() for a in args] if args else None
+    findings = docs.check_links(REPO, files=files)
+    findings += docs.check_rule_docs(REPO, sorted(rules.RULES))
+    if findings:
+        for f in findings:
+            loc = f"{f['path']}:{f['line']}" if f["line"] else f["path"]
+            print(f"ERROR: {loc}: {f['rule']} {f['message']}",
+                  file=sys.stderr)
+        print(f"{len(findings)} docs finding(s)", file=sys.stderr)
         return 1
-    print(f"docs OK: {len(files)} file(s), {n_links} link(s) resolve")
+    print("docs OK: links resolve, every analyzer rule is documented")
     return 0
 
 

@@ -1,0 +1,21 @@
+"""repro.analysis — repo-specific static analysis gating CI.
+
+Four AST checkers encode the invariants this codebase keeps re-breaking by
+hand (see docs/ANALYSIS.md for the rule catalog):
+
+  CK  cache-key completeness  — every policy field flows into its cache key
+  JP  jit purity / host sync  — functions reachable under jit stay pure
+  US  unit-suffix convention  — the physics layer names carry their units
+  BK  backend-registry coverage — every kernel op has oracle + fallback + test
+  DC  docs — links, anchors, and the rule catalog itself
+
+Run ``python -m repro.analysis`` (see ``__main__.py`` for the CLI). The
+package imports no jax/numpy — it parses sources, never imports them.
+"""
+from repro.analysis.astutil import Project
+from repro.analysis.findings import Baseline, Finding
+from repro.analysis.rules import EXIT_BITS, FAMILIES, RULES
+from repro.analysis.runner import Report, run_analysis
+
+__all__ = ["Project", "Baseline", "Finding", "EXIT_BITS", "FAMILIES",
+           "RULES", "Report", "run_analysis"]

@@ -1,0 +1,96 @@
+"""``python -m repro.analysis`` — the CI gate.
+
+    python -m repro.analysis                    # human output, exit bitmask
+    python -m repro.analysis --format=json      # machine-readable report
+    python -m repro.analysis --docs             # + link/anchor/rule-doc checks
+    python -m repro.analysis --rules CK,US      # restrict to families
+    python -m repro.analysis --write-baseline   # snapshot current findings
+    python -m repro.analysis --list-rules       # rule catalog
+
+Exit code is the OR of the family bits (CK=1 JP=2 US=4 BK=8 DC=16) of every
+*active* finding — 0 means clean against the committed baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.findings import Baseline
+from repro.analysis.rules import EXIT_BITS, FAMILIES, RULES, family_of
+from repro.analysis.runner import DEFAULT_BASELINE, run_analysis
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific static analysis (cache keys, jit purity, "
+                    "unit suffixes, backend coverage, docs)")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: auto-detect from this package)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON report to this file")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline file (default: <root>/{DEFAULT_BASELINE})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write every current finding into the baseline "
+                         "file (with TODO justifications) and exit 0")
+    ap.add_argument("--docs", action="store_true",
+                    help="also run the DC docs checks (links, anchors, "
+                         "rule catalog)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule families to run "
+                         f"(default: all of {','.join(FAMILIES)})")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, (title, summary) in sorted(RULES.items()):
+            bit = EXIT_BITS[family_of(rid)]
+            print(f"{rid}  [{title}] (exit bit {bit})\n      {summary}")
+        return 0
+
+    root = Path(args.root) if args.root else _detect_root()
+    checks = None
+    if args.rules:
+        checks = tuple(r.strip().upper() for r in args.rules.split(","))
+        bad = [c for c in checks if c not in FAMILIES]
+        if bad:
+            ap.error(f"unknown rule famil(y/ies) {bad}; valid: {FAMILIES}")
+    baseline = Path(args.baseline) if args.baseline else None
+
+    report = run_analysis(root, checks=checks, baseline_path=baseline,
+                          with_docs=args.docs)
+
+    if args.write_baseline:
+        path = baseline or (root / DEFAULT_BASELINE)
+        Baseline.write(path, report.findings + report.baselined)
+        print(f"wrote {len(report.findings) + len(report.baselined)} "
+              f"entr(y/ies) to {path}")
+        return 0
+
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as fh:
+            json.dump(report.to_dict(), fh, indent=2)
+            fh.write("\n")
+    if args.format == "json":
+        print(json.dumps(report.to_dict(), indent=2))
+    else:
+        print(report.format_text())
+    return report.exit_code
+
+
+def _detect_root() -> Path:
+    """src/repro/analysis/__main__.py -> repo root three levels up from
+    the package directory (works for editable installs and src layouts)."""
+    pkg = Path(__file__).resolve().parent
+    for cand in (pkg.parents[2], Path.cwd()):
+        if (cand / "src" / "repro").is_dir() or (cand / "repro").is_dir():
+            return cand
+    return Path.cwd()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,82 @@
+"""BK: kernel backend-registry coverage.
+
+Every op registered with ``repro.kernels.backend.register(name, **impls)``
+is a dispatch point with three possible paths (tpu / interpret / xla). The
+repo's correctness story for kernels is "the pallas path is proved against
+the interpret oracle, the xla path is the CPU fallback" — so an op missing
+either non-tpu impl has no oracle or no fallback:
+
+BK01  registered op has no ``interpret=`` implementation
+BK02  registered op has no ``xla=`` implementation
+BK03  registered op name appears in no file under ``tests/`` — nothing
+      exercises the dispatch path at all
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.astutil import (
+    Project, dotted, import_aliases, string_value,
+)
+from repro.analysis.findings import Finding
+
+SCAN_DIR = "src/repro"
+TESTS_DIR = "tests"
+REGISTRY_MODULE = "repro.kernels.backend"
+
+
+def _is_backend_register(mod, aliases, node: ast.Call) -> bool:
+    """Only registrations into the kernel backend registry count — the repo
+    has other ``register`` functions (e.g. the model-config registry in
+    ``repro.configs``) with different contracts."""
+    if mod.rel == "src/" + REGISTRY_MODULE.replace(".", "/") + ".py":
+        return isinstance(node.func, ast.Name) and node.func.id == "register"
+    if isinstance(node.func, ast.Name):
+        return aliases.get(node.func.id) == REGISTRY_MODULE + ".register"
+    if isinstance(node.func, ast.Attribute) and node.func.attr == "register":
+        base = dotted(node.func.value)
+        return base is not None and aliases.get(base) == REGISTRY_MODULE
+    return False
+
+
+def _registrations(project: Project):
+    """(module, call node, op name, impl keywords) for every registration
+    into the kernel backend registry."""
+    for mod in project.iter_modules(SCAN_DIR):
+        aliases = import_aliases(mod.tree)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if not _is_backend_register(mod, aliases, node):
+                continue
+            if not node.args:
+                continue
+            name = string_value(node.args[0])
+            if name is None:
+                continue
+            impls = {kw.arg for kw in node.keywords if kw.arg}
+            yield mod, node, name, impls
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    test_sources = [m.source for m in project.iter_modules(TESTS_DIR)]
+    for mod, node, name, impls in _registrations(project):
+        snippet = mod.snippet(node.lineno)
+        if "interpret" not in impls:
+            findings.append(Finding(
+                "BK01", mod.rel, node.lineno,
+                f"op {name!r} registered without an 'interpret' impl — no "
+                f"oracle to prove the tpu path against", snippet=snippet))
+        if "xla" not in impls:
+            findings.append(Finding(
+                "BK02", mod.rel, node.lineno,
+                f"op {name!r} registered without an 'xla' impl — no CPU "
+                f"fallback path", snippet=snippet))
+        if not any(name in src for src in test_sources):
+            findings.append(Finding(
+                "BK03", mod.rel, node.lineno,
+                f"op {name!r} is not referenced by any file under tests/ — "
+                f"no test exercises its dispatch", snippet=snippet))
+    return findings

@@ -1,0 +1,131 @@
+"""DC: documentation checks (links, anchors, rule catalog).
+
+Stdlib-only and free of intra-package imports on purpose:
+``scripts/check_docs.py`` loads this file standalone via importlib so the
+docs gate also runs in environments where the ``repro`` package is not
+installed (the pre-commit hook, bare checkouts).
+
+DC01  a markdown link targets a file that does not exist
+DC02  a markdown link targets a ``#anchor`` with no matching heading slug
+DC03  an analyzer rule ID is not documented in ``docs/ANALYSIS.md``
+
+Findings are returned as plain dicts (``rule``/``path``/``line``/
+``message``/``snippet``) so this module does not depend on
+``repro.analysis.findings``; the runner adapts them.
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+from typing import Dict, List, Sequence
+
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_FENCE = re.compile(r"^(```|~~~).*?^\1\s*$", re.M | re.S)
+_HEADING = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$", re.M)
+_EXTERNAL = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")  # http:, mailto:, ...
+
+RULE_CATALOG_MD = "docs/ANALYSIS.md"
+
+
+def _finding(rule: str, path: str, line: int, message: str,
+             snippet: str = "") -> Dict[str, object]:
+    return {"rule": rule, "path": path, "line": line, "message": message,
+            "snippet": snippet}
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for one heading line (underscores are
+    preserved — GitHub keeps them in anchors, and this repo's API docs use
+    snake_case headings)."""
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)
+    text = text.replace("`", "").replace("*", "").strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> frozenset:
+    """All heading anchors of a markdown file, with -N duplicate suffixes."""
+    body = _FENCE.sub("", path.read_text(encoding="utf-8"))
+    seen: dict = {}
+    out = set()
+    for m in _HEADING.finditer(body):
+        slug = slugify(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return frozenset(out)
+
+
+def _line_of(body: str, pos: int) -> int:
+    return body.count("\n", 0, pos) + 1
+
+
+def check_links(root, files: Sequence[Path] = None) -> List[Dict[str, object]]:
+    """DC01/DC02 over docs/*.md + README.md (or an explicit file list)."""
+    root = Path(root)
+    if files is None:
+        files = sorted((root / "docs").glob("*.md"))
+        if (root / "README.md").exists():
+            files.append(root / "README.md")
+    findings: List[Dict[str, object]] = []
+    anchor_cache: Dict[Path, frozenset] = {}
+    for path in files:
+        path = Path(path)
+        if not path.is_absolute():
+            path = root / path
+        if not path.exists():
+            findings.append(_finding("DC01", _rel(root, path), 0,
+                                     "no such file", snippet=str(path.name)))
+            continue
+        raw = path.read_text(encoding="utf-8")
+        body = _FENCE.sub(lambda m: "\n" * m.group(0).count("\n"), raw)
+        for m in _LINK.finditer(body):
+            target = m.group(1)
+            if _EXTERNAL.match(target):
+                continue
+            line = _line_of(body, m.start())
+            file_part, _, anchor = target.partition("#")
+            dest = path if not file_part else (
+                path.parent / file_part).resolve()
+            if not dest.exists():
+                findings.append(_finding(
+                    "DC01", _rel(root, path), line,
+                    f"broken link {target!r} (no such file {file_part})",
+                    snippet=target))
+                continue
+            if anchor and dest.suffix.lower() in (".md", ".markdown"):
+                if dest not in anchor_cache:
+                    anchor_cache[dest] = anchors_of(dest)
+                if anchor not in anchor_cache[dest]:
+                    findings.append(_finding(
+                        "DC02", _rel(root, path), line,
+                        f"broken anchor {target!r} (no heading slug "
+                        f"'#{anchor}' in {_rel(root, dest)})",
+                        snippet=target))
+    return findings
+
+
+def check_rule_docs(root, rule_ids: Sequence[str]) -> List[Dict[str, object]]:
+    """DC03: every analyzer rule ID must appear in docs/ANALYSIS.md."""
+    root = Path(root)
+    catalog = root / RULE_CATALOG_MD
+    if not catalog.exists():
+        return [_finding("DC03", RULE_CATALOG_MD, 0,
+                         "rule catalog docs/ANALYSIS.md does not exist",
+                         snippet=RULE_CATALOG_MD)]
+    body = catalog.read_text(encoding="utf-8")
+    out = []
+    for rid in rule_ids:
+        if rid not in body:
+            out.append(_finding(
+                "DC03", RULE_CATALOG_MD, 0,
+                f"rule {rid} is not documented in docs/ANALYSIS.md",
+                snippet=rid))
+    return out
+
+
+def _rel(root: Path, path: Path) -> str:
+    try:
+        return path.resolve().relative_to(Path(root).resolve()).as_posix()
+    except ValueError:
+        return str(path)

@@ -1,0 +1,314 @@
+"""JP: jit purity / host sync.
+
+Finds functions *reachable under tracing* — seeded from ``jax.jit`` /
+``jax.vmap`` / ``lax.scan`` / ``pallas_call`` call sites and from
+``kernels.backend.register(...)`` (registered impls are the jit-safety
+contract), then closed over same-package call edges — and lints them:
+
+JP01  Python side effects: print/input/breakpoint, ``open``, ``global``.
+JP02  host syncs: ``.item()`` / ``.tolist()`` / ``.block_until_ready()``
+      anywhere; ``float()/int()/bool()/len()`` or ``np.asarray``/``np.array``
+      applied to a traced expression (a jnp/jax/lax call, or a local
+      assigned from one).
+JP03  Python control flow (``if``/``while``/ternary) on a traced expression
+      — a TracerBoolConversionError at trace time.
+JP04  a jit static argument whose default is an unhashable literal
+      (list/dict/set).
+
+Branches guarded by *type checks* (isinstance/hasattr/callable/``is``
+comparisons) are skipped — argument types are static under tracing, so such
+branches resolve at trace time and anything inside them never sees a tracer.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.astutil import (
+    Module, Project, arg_names, dotted, functions_of, import_aliases,
+)
+from repro.analysis.findings import Finding
+
+SCAN_DIRS = ("src/repro/core", "src/repro/hetero", "src/repro/sim",
+             "src/repro/kernels")
+
+_JIT_WRAPPERS = {"jit", "vmap", "pmap", "grad", "value_and_grad", "scan",
+                 "pallas_call", "register", "checkpoint", "remat"}
+_TRACED_ROOTS = ("jnp", "jax", "lax", "pl")
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_SYNC_CASTS = {"float", "int", "bool", "len"}
+_SIDE_EFFECT_CALLS = {"print", "input", "breakpoint", "open"}
+
+FnKey = Tuple[str, str]           # (module rel path, function name)
+
+
+def _is_type_guard(test: ast.AST) -> bool:
+    """Tests that are static under tracing: isinstance/hasattr/callable
+    calls, ``x is None`` style identity comparisons, and boolean
+    combinations thereof."""
+    if isinstance(test, ast.BoolOp):
+        return all(_is_type_guard(v) for v in test.values)
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _is_type_guard(test.operand)
+    for node in ast.walk(test):
+        if isinstance(node, ast.Call):
+            callee = dotted(node.func)
+            if callee and callee.split(".")[-1] in (
+                    "isinstance", "hasattr", "callable", "issubclass"):
+                return True
+        if isinstance(node, ast.Compare) and any(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return True
+    return False
+
+
+def _resolve(mod: Module, aliases: Dict[str, str], name: str,
+             project: Project) -> Optional[FnKey]:
+    """Resolve a bare name referenced in ``mod`` to a (file, function)."""
+    if name in functions_of(mod.tree):
+        return (mod.rel, name)
+    target = aliases.get(name)
+    if target and target.startswith("repro."):
+        parts = target.split(".")
+        # repro.a.b.fn -> module repro/a/b.py function fn
+        if len(parts) >= 2:
+            rel = "src/" + "/".join(parts[:-1]) + ".py"
+            other = project.module(rel)
+            if other is not None and parts[-1] in functions_of(other.tree):
+                return (rel, parts[-1])
+    return None
+
+
+def _resolve_attr(mod: Module, aliases: Dict[str, str], chain: str,
+                  project: Project) -> Optional[FnKey]:
+    """Resolve ``alias.fn`` where alias is an imported repro module."""
+    parts = chain.split(".")
+    if len(parts) != 2:
+        return None
+    target = aliases.get(parts[0])
+    if target and target.startswith("repro."):
+        rel = "src/" + target.replace(".", "/") + ".py"
+        other = project.module(rel)
+        if other is not None and parts[1] in functions_of(other.tree):
+            return (rel, parts[1])
+    return None
+
+
+def _collect_seeds(project: Project) -> Tuple[Set[FnKey], Dict[FnKey, dict]]:
+    """Functions named inside jit/vmap/scan/register call expressions, plus
+    per-seed static-arg info for JP04."""
+    seeds: Set[FnKey] = set()
+    static_info: Dict[FnKey, dict] = {}
+    for d in SCAN_DIRS:
+        for mod in project.iter_modules(d):
+            aliases = import_aliases(mod.tree)
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                callee = dotted(node.func)
+                if not callee or callee.split(".")[-1] not in _JIT_WRAPPERS:
+                    continue
+                refs: List[FnKey] = []
+                for sub in node.args + [kw.value for kw in node.keywords]:
+                    for n in ast.walk(sub):
+                        key = None
+                        if isinstance(n, ast.Name):
+                            key = _resolve(mod, aliases, n.id, project)
+                        elif isinstance(n, ast.Attribute):
+                            chain = dotted(n)
+                            if chain:
+                                key = _resolve_attr(mod, aliases, chain,
+                                                    project)
+                        if key:
+                            refs.append(key)
+                seeds.update(refs)
+                statics = _static_args_of(node)
+                if statics and refs:
+                    static_info[refs[0]] = statics
+    return seeds, static_info
+
+
+def _static_args_of(call: ast.Call) -> dict:
+    out = {}
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            nums = [n.value for n in ast.walk(kw.value)
+                    if isinstance(n, ast.Constant)
+                    and isinstance(n.value, int)]
+            out["nums"] = nums
+        elif kw.arg == "static_argnames":
+            names = [n.value for n in ast.walk(kw.value)
+                     if isinstance(n, ast.Constant)
+                     and isinstance(n.value, str)]
+            out["names"] = names
+    return out
+
+
+def _find_function(project: Project, key: FnKey) -> Optional[ast.AST]:
+    mod = project.module(key[0])
+    if mod is None:
+        return None
+    return functions_of(mod.tree).get(key[1])
+
+
+class _FnLinter(ast.NodeVisitor):
+    """Single-function pass: traced-local inference, flag collection, and
+    outgoing call edges — all skipping type-guarded branches."""
+
+    def __init__(self, mod: Module, fn: ast.AST, aliases: Dict[str, str],
+                 project: Project):
+        self.mod = mod
+        self.fn = fn
+        self.aliases = aliases
+        self.project = project
+        self.traced: Set[str] = set()
+        self.findings: List[Finding] = []
+        self.edges: Set[FnKey] = set()
+
+    # -- traced-expression test --------------------------------------------
+    def _is_traced(self, expr: ast.AST) -> bool:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Name) and node.id in self.traced:
+                return True
+            if isinstance(node, ast.Call):
+                callee = dotted(node.func)
+                if callee and callee.split(".")[0] in _TRACED_ROOTS:
+                    return True
+        return False
+
+    def _flag(self, rule: str, node: ast.AST, msg: str) -> None:
+        self.findings.append(Finding(
+            rule, self.mod.rel, node.lineno,
+            f"{msg} (in jit-reachable function {self.fn.name!r})",
+            snippet=self.mod.snippet(node.lineno)))
+
+    # -- statements --------------------------------------------------------
+    def visit_If(self, node: ast.If) -> None:
+        if _is_type_guard(node.test):
+            return          # static under tracing: skip whole branch
+        if self._is_traced(node.test):
+            self._flag("JP03", node, "Python `if` on a traced value")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        if _is_type_guard(node.test):
+            return
+        if self._is_traced(node.test):
+            self._flag("JP03", node, "Python `while` on a traced value")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node: ast.IfExp) -> None:
+        if not _is_type_guard(node.test) and self._is_traced(node.test):
+            self._flag("JP03", node, "ternary on a traced value")
+        self.generic_visit(node)
+
+    def visit_Global(self, node: ast.Global) -> None:
+        self._flag("JP01", node, "`global` statement (hidden Python state)")
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.generic_visit(node)
+        if self._is_traced(node.value):
+            for t in node.targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        self.traced.add(n.id)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self.generic_visit(node)
+        if self._is_traced(node.value) and isinstance(node.target, ast.Name):
+            self.traced.add(node.target.id)
+
+    def visit_FunctionDef(self, node) -> None:
+        # nested defs share the linting context (closures run under trace)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node: ast.Call) -> None:
+        self.generic_visit(node)
+        callee = dotted(node.func)
+        last = callee.split(".")[-1] if callee else None
+        # JP01 side effects
+        if callee in _SIDE_EFFECT_CALLS:
+            self._flag("JP01", node, f"call to {callee}()")
+        # JP02 explicit syncs: .item() / .tolist() / .block_until_ready()
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr in _SYNC_METHODS:
+            self._flag("JP02", node,
+                       f".{node.func.attr}() forces a host sync")
+        # JP02 casts of traced expressions
+        if callee in _SYNC_CASTS and node.args and \
+                self._is_traced(node.args[0]):
+            self._flag("JP02", node,
+                       f"{callee}() on a traced value forces a host sync")
+        if callee in ("np.asarray", "np.array", "numpy.asarray",
+                      "numpy.array") and node.args and \
+                self._is_traced(node.args[0]):
+            self._flag("JP02", node,
+                       f"{callee}() on a traced value forces a host sync")
+        # call edges for reachability
+        key = None
+        if isinstance(node.func, ast.Name):
+            key = _resolve(self.mod, self.aliases, node.func.id, self.project)
+        elif callee:
+            key = _resolve_attr(self.mod, self.aliases, callee, self.project)
+        if key:
+            self.edges.add(key)
+
+
+def _check_static_defaults(project: Project, key: FnKey, statics: dict,
+                           findings: List[Finding]) -> None:
+    fn = _find_function(project, key)
+    if fn is None:
+        return
+    mod = project.module(key[0])
+    params = fn.args.args + fn.args.posonlyargs
+    defaults = fn.args.defaults
+    # align defaults to trailing params
+    offset = len(params) - len(defaults)
+    static_names = set(statics.get("names", ()))
+    for i in statics.get("nums", ()):
+        if 0 <= i < len(params):
+            static_names.add(params[i].arg)
+    for i, d in enumerate(defaults):
+        p = params[offset + i].arg
+        if p in static_names and isinstance(d, (ast.List, ast.Dict, ast.Set)):
+            findings.append(Finding(
+                "JP04", key[0], d.lineno,
+                f"static argument {p!r} of {key[1]!r} has an unhashable "
+                f"{type(d).__name__.lower()} default — jit will raise at "
+                f"call time", snippet=mod.snippet(d.lineno)))
+
+
+def check(project: Project) -> List[Finding]:
+    seeds, static_info = _collect_seeds(project)
+    findings: List[Finding] = []
+    for key, statics in sorted(static_info.items()):
+        _check_static_defaults(project, key, statics, findings)
+
+    visited: Set[FnKey] = set()
+    queue = sorted(seeds)
+    while queue:
+        key = queue.pop()
+        if key in visited:
+            continue
+        visited.add(key)
+        # only lint the accelerator-adjacent layers named by the issue
+        if not any(key[0].startswith(d + "/") for d in SCAN_DIRS):
+            continue
+        mod = project.module(key[0])
+        if mod is None:
+            continue
+        fn = functions_of(mod.tree).get(key[1])
+        if fn is None:
+            continue
+        linter = _FnLinter(mod, fn, import_aliases(mod.tree), project)
+        # seed traced-ness conservatively: nothing is traced until a
+        # jnp/jax/lax call produces it (params stay untraced so static
+        # shape/flag arithmetic doesn't flag)
+        linter.visit(fn)
+        findings.extend(linter.findings)
+        for edge in linter.edges:
+            if edge not in visited:
+                queue.append(edge)
+    return findings

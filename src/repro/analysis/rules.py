@@ -1,0 +1,87 @@
+"""Rule registry of the repo-specific static analyzer.
+
+Pure data, stdlib-only, no intra-package imports: ``scripts/check_docs.py``
+loads this file standalone (importlib, no ``repro`` package import) so the
+rule-ID documentation check runs even in environments without the package
+installed.
+
+Rule IDs group into families by two-letter prefix; the family prefix is also
+the unit of the CLI exit-code bitmask (see ``EXIT_BITS``):
+
+  CK  cache-key completeness    (policy fields / ingredients -> cache keys)
+  JP  jit purity / host sync    (functions reachable under jit/vmap/scan)
+  US  unit-suffix convention    (physics-layer naming + unit algebra)
+  BK  backend-registry coverage (kernels.backend ops: impls + tests)
+  DC  docs                      (intra-repo links, anchors, rule catalog)
+"""
+from __future__ import annotations
+
+# id -> (title, one-line description)
+RULES = {
+    "CK01": ("policy-field-not-keyed",
+             "a field of a policy dataclass does not flow into the cache-key "
+             "construction that fingerprints it"),
+    "CK02": ("key-param-unused",
+             "a parameter of a cache-key function is never read in its body "
+             "(an input that cannot affect the key)"),
+    "CK03": ("key-ingredient-missing",
+             "a cache-key function no longer references a required "
+             "ingredient (e.g. grid_hash without corners_fingerprint)"),
+    "CK04": ("physics-fingerprint-drift",
+             "a module in the import closure of the characterization "
+             "pipeline is not hashed by _physics_fingerprint"),
+    "CK05": ("key-spec-target-missing",
+             "a file/function/class named by the cache-key checker spec "
+             "does not exist (the analyzer spec rotted)"),
+    "JP01": ("jit-side-effect",
+             "Python side effect (print/open/input/global/os.environ write) "
+             "in a function reachable under jit/vmap/scan"),
+    "JP02": ("jit-host-sync",
+             ".item()/.tolist()/float()/int()/bool()/np.asarray on a traced "
+             "value in a jit-reachable function (forces a device sync)"),
+    "JP03": ("jit-data-dependent-branch",
+             "Python if/while branching on a traced value in a jit-reachable "
+             "function (TracerBoolConversionError at trace time)"),
+    "JP04": ("jit-unhashable-static-arg",
+             "a parameter declared static via static_argnums/static_argnames "
+             "has an unhashable (list/dict/set) default"),
+    "US01": ("unit-suffix-missing",
+             "a physics binding (t_/e_/p_/f_/i_/l_/c_/r_/v_ prefix, or a "
+             "quantity with an inferable unit) lacks a unit suffix"),
+    "US02": ("unit-mix",
+             "arithmetic (+/-, comparison, min/max) mixes incompatible unit "
+             "suffixes, e.g. adding _w to _j"),
+    "US03": ("unit-suffix-conflict",
+             "a binding's unit suffix conflicts with the unit inferred from "
+             "its right-hand side (or with its prefix convention)"),
+    "BK01": ("backend-missing-interpret",
+             "an op registered in kernels.backend has no 'interpret' "
+             "implementation (no oracle to prove the tpu path against)"),
+    "BK02": ("backend-missing-xla",
+             "an op registered in kernels.backend has no 'xla' "
+             "implementation (no CPU fallback path)"),
+    "BK03": ("backend-op-untested",
+             "an op registered in kernels.backend is not referenced by any "
+             "test (no bit-exactness proof exercises it)"),
+    "DC01": ("doc-broken-link",
+             "a markdown link targets a file that does not exist"),
+    "DC02": ("doc-broken-anchor",
+             "a markdown link targets a #anchor with no matching heading"),
+    "DC03": ("rule-undocumented",
+             "an analyzer rule ID is not documented in docs/ANALYSIS.md"),
+}
+
+FAMILIES = ("CK", "JP", "US", "BK", "DC")
+
+# exit-code bitmask per family: the CLI exits with the OR of the bits of
+# every family that produced at least one active (unsuppressed, unbaselined)
+# finding. 0 = clean.
+EXIT_BITS = {"CK": 1, "JP": 2, "US": 4, "BK": 8, "DC": 16}
+
+
+def family_of(rule_id: str) -> str:
+    return rule_id[:2]
+
+
+def is_known(rule_id: str) -> bool:
+    return rule_id in RULES

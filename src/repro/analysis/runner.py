@@ -1,0 +1,110 @@
+"""Orchestrates the checkers, applies noqa + baseline, computes exit codes."""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis import backend_cov, cache_keys, docs as docs_mod
+from repro.analysis import jit_purity, units
+from repro.analysis.astutil import Project
+from repro.analysis.findings import Baseline, Finding, is_suppressed
+from repro.analysis.rules import EXIT_BITS, RULES, family_of
+
+DEFAULT_BASELINE = "analysis_baseline.json"
+
+CHECKERS = {
+    "CK": cache_keys.check,
+    "JP": jit_purity.check,
+    "US": units.check,
+    "BK": backend_cov.check,
+}
+
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding]            # active: fail the build
+    suppressed: List[Finding]          # silenced by inline  # noqa
+    baselined: List[Finding]           # matched a committed baseline entry
+    stale_baseline: List[dict]         # baseline entries matching nothing
+
+    @property
+    def exit_code(self) -> int:
+        code = 0
+        for f in self.findings:
+            code |= EXIT_BITS.get(family_of(f.rule), 0)
+        return code
+
+    def to_dict(self) -> dict:
+        by_family: Dict[str, int] = {}
+        for f in self.findings:
+            by_family[family_of(f.rule)] = \
+                by_family.get(family_of(f.rule), 0) + 1
+        return {
+            "exit_code": self.exit_code,
+            "counts": {"active": len(self.findings),
+                       "suppressed": len(self.suppressed),
+                       "baselined": len(self.baselined),
+                       "stale_baseline": len(self.stale_baseline),
+                       "by_family": by_family},
+            "findings": [f.to_dict() for f in self.findings],
+            "suppressed": [f.to_dict() for f in self.suppressed],
+            "baselined": [f.to_dict() for f in self.baselined],
+            "stale_baseline": list(self.stale_baseline),
+        }
+
+    def format_text(self) -> str:
+        lines = []
+        for f in sorted(self.findings, key=lambda f: (f.path, f.line, f.rule)):
+            title = RULES.get(f.rule, ("?",))[0]
+            lines.append(f"{f.format()} [{title}]")
+        n = len(self.findings)
+        lines.append(f"repro.analysis: {n} active finding(s), "
+                     f"{len(self.baselined)} baselined, "
+                     f"{len(self.suppressed)} noqa-suppressed")
+        if self.stale_baseline:
+            lines.append(f"note: {len(self.stale_baseline)} stale baseline "
+                         f"entr(y/ies) no longer match anything — prune "
+                         f"{DEFAULT_BASELINE}")
+        return "\n".join(lines)
+
+
+def run_analysis(root, checks: Optional[Sequence[str]] = None,
+                 baseline_path=None, with_docs: bool = False,
+                 project: Optional[Project] = None) -> Report:
+    """Run the analyzer over the repo at ``root``.
+
+    ``checks`` restricts to rule families (("CK", "US"), ...); ``with_docs``
+    adds the DC family; ``project`` injects a pre-built (possibly overlaid)
+    Project — the hook the analyzer's own tests use to mutate sources.
+    """
+    root = Path(root)
+    if project is None:
+        project = Project(root)
+    selected = tuple(checks) if checks else tuple(CHECKERS)
+    raw: List[Finding] = []
+    for fam in selected:
+        if fam in CHECKERS:
+            raw.extend(CHECKERS[fam](project))
+    if with_docs or (checks and "DC" in checks):
+        for d in docs_mod.check_links(root):
+            raw.append(Finding(**d))
+        for d in docs_mod.check_rule_docs(root, sorted(RULES)):
+            raw.append(Finding(**d))
+
+    # inline noqa
+    kept: List[Finding] = []
+    suppressed: List[Finding] = []
+    for f in raw:
+        mod = project.module(f.path) if f.path.endswith(".py") else None
+        line = mod.line(f.line) if (mod and f.line) else ""
+        (suppressed if is_suppressed(f, line) else kept).append(f)
+
+    # committed baseline
+    if baseline_path is None:
+        baseline_path = root / DEFAULT_BASELINE
+    baseline = Baseline.load(baseline_path)
+    active, baselined = baseline.split(kept)
+    return Report(findings=active, suppressed=suppressed,
+                  baselined=baselined,
+                  stale_baseline=baseline.stale_entries(kept))

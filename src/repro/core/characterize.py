@@ -42,9 +42,9 @@ def _write_current(cell, ls, tp=None):
     wdev = devices.take_device(bitcells.DEVICE_STACK,
                                cell.write_dev.astype(jnp.int32))
     vwwl = jnp.where(ls > 0, tp.vdd_boost, tp.vdd)
-    v_t = bitcells.sn_high_level(cell, ls, tp)
-    vgs = vwwl - 0.9 * v_t
-    return devices.mosfet_id(wdev, vgs, jnp.maximum(tp.vdd - 0.9 * v_t, 0.1),
+    v_sn_v = bitcells.sn_high_level(cell, ls, tp)
+    vgs = vwwl - 0.9 * v_sn_v
+    return devices.mosfet_id(wdev, vgs, jnp.maximum(tp.vdd - 0.9 * v_sn_v, 0.1),
                              cell.w_write, tp)
 
 
@@ -67,100 +67,108 @@ def characterize(vec, tp=None):
     ls, m, wz = g["ls"], g["mux"], g["wz"]
     is_gc = g["is_gc"]
 
-    area, breakdown = macro.macro_area(g)
+    area_um2, breakdown = macro.macro_area(g)
 
     # ---------------- read path -------------------------------------------
-    dec_a, t_dec, e_dec, l_dec = periphery.decoder(rows, tp)
-    c_wl, r_wl = periphery.wordline_rc(cols, cell.cell_w, cell.w_read)
-    _, t_wl, e_wl, l_wl = periphery.wl_driver(c_wl, r_wl, tp=tp)
-    c_bl, r_bl = periphery.bitline_rc(rows, cell.cell_h, cell.w_read)
+    _, t_dec_s, e_dec_j, l_dec_a = periphery.decoder(rows, tp)
+    c_wl_f, r_wl_ohm = periphery.wordline_rc(cols, cell.cell_w, cell.w_read)
+    _, t_wl_s, e_wl_j, l_wl_a = periphery.wl_driver(c_wl_f, r_wl_ohm, tp=tp)
+    c_bl_f, r_bl_ohm = periphery.bitline_rc(rows, cell.cell_h, cell.w_read)
 
-    i_rd_gc = _read_current(cell, ls, tp)
-    t_bl_gc = c_bl * tp.v_sense / jnp.maximum(i_rd_gc, 1e-9)
-    i_rd_sram = _sram_cell_current(cell, tp)
-    t_bl_sram = c_bl * tp.v_sense_sram / jnp.maximum(i_rd_sram, 1e-9)
-    t_bl = jnp.where(is_gc > 0, t_bl_gc, t_bl_sram)
+    i_rd_gc_a = _read_current(cell, ls, tp)
+    t_bl_gc_s = c_bl_f * tp.v_sense / jnp.maximum(i_rd_gc_a, 1e-9)
+    i_rd_sram_a = _sram_cell_current(cell, tp)
+    t_bl_sram_s = c_bl_f * tp.v_sense_sram / jnp.maximum(i_rd_sram_a, 1e-9)
+    t_bl_s = jnp.where(is_gc > 0, t_bl_gc_s, t_bl_sram_s)
 
-    _, t_mux, e_mux, l_mux = periphery.column_mux(m, tp)
-    sa_a, t_sa, e_sa, l_sa = periphery.sense_amp(tp=tp)
-    sa_a2, t_sa2, e_sa2, l_sa2 = periphery.sense_amp(current_mode=True, tp=tp)
-    t_sa = jnp.where(g["sa_cm"] > 0, t_sa2, t_sa)
-    e_sa = jnp.where(g["sa_cm"] > 0, e_sa2, e_sa)
+    _, t_mux_s, e_mux_j, l_mux_a = periphery.column_mux(m, tp)
+    _, t_sa_s, e_sa_j, l_sa_a = periphery.sense_amp(tp=tp)
+    _, t_sa2_s, e_sa2_j, l_sa2_a = periphery.sense_amp(current_mode=True,
+                                                       tp=tp)
+    t_sa_s = jnp.where(g["sa_cm"] > 0, t_sa2_s, t_sa_s)
+    e_sa_j = jnp.where(g["sa_cm"] > 0, e_sa2_j, e_sa_j)
 
-    t_read = (tech.T_DFF_CQ + t_dec + t_wl + 0.7 * r_bl * c_bl + t_bl
-              + t_mux + t_sa + tech.T_SETUP)
-    t_read_cyc, dc_a, e_dc, l_dc = periphery.delay_chain(t_read, tp)
+    t_read_s = (tech.T_DFF_CQ + t_dec_s + t_wl_s
+                + 0.7 * r_bl_ohm * c_bl_f + t_bl_s
+                + t_mux_s + t_sa_s + tech.T_SETUP)
+    t_read_cyc_s, _, e_dc_j, l_dc_a = periphery.delay_chain(t_read_s, tp)
 
     # ---------------- write path ------------------------------------------
-    c_wwl, r_wwl = periphery.wordline_rc(cols, cell.cell_w, cell.w_write)
-    _, t_wwl, e_wwl, l_wwl = periphery.wl_driver(c_wwl, r_wwl, boost=True,
-                                                 tp=tp)
-    ls_a, t_ls, e_ls, l_ls = periphery.level_shifter(tp)
-    t_wwl = t_wwl + ls * t_ls * is_gc
-    c_wbl, _ = periphery.bitline_rc(rows, cell.cell_h, cell.w_write)
-    wd_a, t_wd, e_wd, l_wd = periphery.write_driver(c_wbl, tp)
-    i_w = _write_current(cell, ls, tp)
-    t_sn = cell.c_sn * bitcells.sn_high_level(cell, ls, tp) \
-        / jnp.maximum(i_w, 1e-9)
-    t_sn = jnp.where(is_gc > 0, t_sn, 30e-12)       # SRAM: driver overpowers
-    t_write = tech.T_DFF_CQ + t_dec + t_wwl + t_wd + t_sn + tech.T_SETUP
-    t_write_cyc, _, _, _ = periphery.delay_chain(t_write, tp)
+    c_wwl_f, r_wwl_ohm = periphery.wordline_rc(cols, cell.cell_w,
+                                               cell.w_write)
+    _, t_wwl_s, e_wwl_j, l_wwl_a = periphery.wl_driver(c_wwl_f, r_wwl_ohm,
+                                                       boost=True, tp=tp)
+    _, t_ls_s, e_ls_j, l_ls_a = periphery.level_shifter(tp)
+    t_wwl_s = t_wwl_s + ls * t_ls_s * is_gc
+    c_wbl_f, _ = periphery.bitline_rc(rows, cell.cell_h, cell.w_write)
+    _, t_wd_s, e_wd_j, l_wd_a = periphery.write_driver(c_wbl_f, tp)
+    i_w_a = _write_current(cell, ls, tp)
+    t_sn_s = cell.c_sn * bitcells.sn_high_level(cell, ls, tp) \
+        / jnp.maximum(i_w_a, 1e-9)
+    t_sn_s = jnp.where(is_gc > 0, t_sn_s, 30e-12)   # SRAM: driver overpowers
+    t_write_s = (tech.T_DFF_CQ + t_dec_s + t_wwl_s + t_wd_s + t_sn_s
+                 + tech.T_SETUP)
+    t_write_cyc_s, _, _, _ = periphery.delay_chain(t_write_s, tp)
 
     # ---------------- frequency / bandwidth --------------------------------
-    f_read = 1.0 / t_read_cyc
-    f_write = 1.0 / t_write_cyc
+    f_read_hz = 1.0 / t_read_cyc_s
+    f_write_hz = 1.0 / t_write_cyc_s
     # dual-port GC: concurrent R/W; SRAM: shared port (~30% write traffic)
-    f_sram = 1.0 / jnp.maximum(t_read_cyc, t_write_cyc)
-    f_op = jnp.where(is_gc > 0, jnp.minimum(f_read, f_write), f_sram)
+    f_sram_hz = 1.0 / jnp.maximum(t_read_cyc_s, t_write_cyc_s)
+    f_op_hz = jnp.where(is_gc > 0, jnp.minimum(f_read_hz, f_write_hz),
+                        f_sram_hz)
     # effective READ bandwidth: SRAM's shared port loses ~30% to writes
     # (Fig 8b: "SRAM bandwidth is higher but reduced by the shared port");
     # dual-port GC reads are never blocked, and total BW adds the write port.
-    bw_bits = jnp.where(is_gc > 0, wz * f_read, wz * f_sram * 0.7)
+    bw_bits = jnp.where(is_gc > 0, wz * f_read_hz, wz * f_sram_hz * 0.7)
     bw_total_bits = jnp.where(
-        is_gc > 0, wz * (f_read + f_write * g["dual"]), wz * f_sram * 0.7)
+        is_gc > 0, wz * (f_read_hz + f_write_hz * g["dual"]),
+        wz * f_sram_hz * 0.7)
 
     # ---------------- energy / power ---------------------------------------
-    e_bl_rd = c_bl * tp.vdd * tp.v_sense * cols / jnp.maximum(m, 1.0)
-    e_read = (e_dec + e_wl + c_wl * tp.vdd ** 2 + e_bl_rd + wz * e_sa
-              + e_mux + 2 * wz * tech.E_DFF)
+    e_bl_rd_j = c_bl_f * tp.vdd * tp.v_sense * cols / jnp.maximum(m, 1.0)
+    e_read_j = (e_dec_j + e_wl_j + c_wl_f * tp.vdd ** 2 + e_bl_rd_j
+                + wz * e_sa_j + e_mux_j + 2 * wz * tech.E_DFF)
     # one write asserts a single WWL, so exactly one row's level shifter
     # switches per access (a previous revision multiplied by `rows` and then
     # zeroed the whole term out; the boost-rail recharge is the separate
-    # c_wwl term below)
-    e_write = (e_dec + e_wwl + e_wd * wz + ls * e_ls * is_gc
-               + c_wbl * tp.vdd ** 2 * wz * 0.5 + wz * tech.E_DFF
-               + ls * is_gc * (c_wwl * (tp.vdd_boost ** 2 - tp.vdd ** 2)))
-    p_dyn = (e_read + e_write * 0.5) * f_op * tech.ACTIVITY
+    # c_wwl_f term below)
+    e_write_j = (e_dec_j + e_wwl_j + e_wd_j * wz + ls * e_ls_j * is_gc
+                 + c_wbl_f * tp.vdd ** 2 * wz * 0.5 + wz * tech.E_DFF
+                 + ls * is_gc * (c_wwl_f * (tp.vdd_boost ** 2 - tp.vdd ** 2)))
+    p_dyn_w = (e_read_j + e_write_j * 0.5) * f_op_hz * tech.ACTIVITY
 
     # leakage: SRAM array has static VDD->GND paths; GC array has none.
     adev = devices.take_device(bitcells.DEVICE_STACK,
                                cell.write_dev.astype(jnp.int32))
-    i_cell_leak = cell.leak_paths * devices.i_off(adev, 0.15, tp=tp)
+    i_cell_leak_a = cell.leak_paths * devices.i_off(adev, 0.15, tp=tp)
     ncells = g["wz"] * g["nw"]
-    p_leak_array = ncells * i_cell_leak * tp.vdd
-    periph_leak = (l_dec * (1 + g["dual"]) + l_wl + l_wwl + wz * (l_sa + l_wd)
-                   + l_mux * cols + l_dc + ls * l_ls * rows * is_gc
-                   + periphery.control(tp)[3]) * g["banks"]
-    p_leak = p_leak_array + periph_leak * tp.vdd
+    p_leak_array_w = ncells * i_cell_leak_a * tp.vdd
+    i_periph_leak_a = (l_dec_a * (1 + g["dual"]) + l_wl_a + l_wwl_a
+                       + wz * (l_sa_a + l_wd_a) + l_mux_a * cols + l_dc_a
+                       + ls * l_ls_a * rows * is_gc
+                       + periphery.control(tp)[3]) * g["banks"]
+    p_leak_w = p_leak_array_w + i_periph_leak_a * tp.vdd
 
     # ---------------- retention / refresh -----------------------------------
-    t_ret = jnp.where(is_gc > 0, retention.retention_time(cell, ls, tp), 1e12)
-    p_refresh = jnp.where(
+    t_ret_s = jnp.where(is_gc > 0, retention.retention_time(cell, ls, tp),
+                        1e12)
+    p_refresh_w = jnp.where(
         is_gc > 0,
-        (e_read + e_write) * g["nw"] / jnp.maximum(t_ret, 1e-9), 0.0)
+        (e_read_j + e_write_j) * g["nw"] / jnp.maximum(t_ret_s, 1e-9), 0.0)
 
     return {
-        "area_um2": area,
+        "area_um2": area_um2,
         "area_array_um2": breakdown["array"],
-        "f_read_hz": jnp.where(is_gc > 0, f_read, f_sram),
-        "f_write_hz": jnp.where(is_gc > 0, f_write, f_sram),
-        "f_op_hz": f_op,
+        "f_read_hz": jnp.where(is_gc > 0, f_read_hz, f_sram_hz),
+        "f_write_hz": jnp.where(is_gc > 0, f_write_hz, f_sram_hz),
+        "f_op_hz": f_op_hz,
         "bandwidth_bits_s": bw_bits,
         "bandwidth_total_bits_s": bw_total_bits,
-        "t_read_s": t_read, "t_write_s": t_write,
-        "e_read_j": e_read, "e_write_j": e_write,
-        "p_dyn_w": p_dyn, "p_leak_w": p_leak, "p_refresh_w": p_refresh,
-        "retention_s": t_ret,
+        "t_read_s": t_read_s, "t_write_s": t_write_s,
+        "e_read_j": e_read_j, "e_write_j": e_write_j,
+        "p_dyn_w": p_dyn_w, "p_leak_w": p_leak_w, "p_refresh_w": p_refresh_w,
+        "retention_s": t_ret_s,
         "rows": rows, "cols": cols, "mux": m,
         "bits": ncells,
     }

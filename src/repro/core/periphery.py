@@ -36,11 +36,11 @@ def decoder(rows, tp=None):
     tp = corners.resolve(tp)
     n_addr = jnp.ceil(jnp.log2(jnp.maximum(rows, 2.0)))
     stages = 2.0 + jnp.ceil(n_addr / 3.0)          # predecode depth
-    area = rows * tech.GATE_AREA + n_addr * 4.0 * tech.GATE_AREA
-    delay = stages * tech.T_GATE
-    energy = (n_addr * 4.0 + 2.0) * 1.2e-15 * tp.vdd ** 2
-    leak = (rows + n_addr * 4.0) * 0.5 * INV_LEAK
-    return area, delay, energy, leak
+    area_um2 = rows * tech.GATE_AREA + n_addr * 4.0 * tech.GATE_AREA
+    delay_s = stages * tech.T_GATE
+    energy_j = (n_addr * 4.0 + 2.0) * 1.2e-15 * tp.vdd ** 2
+    leak_a = (rows + n_addr * 4.0) * 0.5 * INV_LEAK
+    return area_um2, delay_s, energy_j, leak_a
 
 
 def wl_driver(c_load, r_wire, boost=False, tp=None):
@@ -50,11 +50,11 @@ def wl_driver(c_load, r_wire, boost=False, tp=None):
     tp = corners.resolve(tp)
     vdd = tp.vdd_boost if boost else tp.vdd
     w_drv = jnp.maximum(c_load / (8.0 * INV_CIN), 1.0)      # fanout-of-8 sizing
-    area = 0.8 + 0.35 * w_drv
-    delay = tech.T_WL_DRV + 0.4 * r_wire * c_load
-    energy = (c_load + w_drv * INV_CIN) * vdd ** 2
-    leak = w_drv * INV_LEAK
-    return area, delay, energy, leak
+    area_um2 = 0.8 + 0.35 * w_drv
+    delay_s = tech.T_WL_DRV + 0.4 * r_wire * c_load
+    energy_j = (c_load + w_drv * INV_CIN) * vdd ** 2
+    leak_a = w_drv * INV_LEAK
+    return area_um2, delay_s, energy_j, leak_a
 
 
 def level_shifter(tp=None):
@@ -66,21 +66,22 @@ def level_shifter(tp=None):
 
 def sense_amp(current_mode=False, tp=None):
     tp = corners.resolve(tp)
-    e_sa = tech.E_SA * (tp.vdd ** 2 / tech.VDD ** 2)   # CV^2-class sense op
+    e_sa_j = tech.E_SA * (tp.vdd ** 2 / tech.VDD ** 2)  # CV^2-class sense op
     if current_mode:
-        return tech.SA_AREA_CURRENT, tech.T_SA_CURRENT, e_sa * 1.6, 4 * INV_LEAK
-    return tech.SA_AREA, tech.T_SA, e_sa, 3 * INV_LEAK
+        return (tech.SA_AREA_CURRENT, tech.T_SA_CURRENT, e_sa_j * 1.6,
+                4 * INV_LEAK)
+    return tech.SA_AREA, tech.T_SA, e_sa_j, 3 * INV_LEAK
 
 
 def write_driver(c_bl, tp=None):
     tp = corners.resolve(tp)
     w_drv = jnp.maximum(c_bl / (10.0 * INV_CIN), 1.0)
-    area = tech.WRITE_DRV_AREA + 0.3 * w_drv
-    delay = 20e-12 + c_bl * tp.vdd / devices.i_on(devices.SI_NMOS, w_drv,
-                                                  tp=tp)
-    energy = c_bl * tp.vdd ** 2 * 0.5              # avg data activity
-    leak = w_drv * INV_LEAK
-    return area, delay, energy, leak
+    area_um2 = tech.WRITE_DRV_AREA + 0.3 * w_drv
+    delay_s = 20e-12 + c_bl * tp.vdd / devices.i_on(devices.SI_NMOS, w_drv,
+                                                    tp=tp)
+    energy_j = c_bl * tp.vdd ** 2 * 0.5            # avg data activity
+    leak_a = w_drv * INV_LEAK
+    return area_um2, delay_s, energy_j, leak_a
 
 
 def column_mux(mux_ratio, tp=None):
@@ -89,10 +90,10 @@ def column_mux(mux_ratio, tp=None):
     is_mux = (mux_ratio > 1).astype(jnp.float32) if hasattr(mux_ratio, "astype") \
         else float(mux_ratio > 1)
     stages = jnp.ceil(jnp.log2(jnp.maximum(mux_ratio, 1.0)))
-    area_per_col = 0.9 * is_mux
-    delay = stages * tech.T_MUX
-    energy = stages * 0.8e-15 * tp.vdd ** 2
-    return area_per_col, delay, energy, 0.2 * INV_LEAK * is_mux
+    area_per_col_um2 = 0.9 * is_mux
+    delay_s = stages * tech.T_MUX
+    energy_j = stages * 0.8e-15 * tp.vdd ** 2
+    return area_per_col_um2, delay_s, energy_j, 0.2 * INV_LEAK * is_mux
 
 
 def predischarge(rows, tp=None):
@@ -118,11 +119,11 @@ def delay_chain(t_crit, tp=None):
     for tall 1:1 arrays (Fig 8a)."""
     tp = corners.resolve(tp)
     n_stages = jnp.ceil(t_crit / tech.DELAY_STAGE) + 1.0
-    t_cycle = n_stages * tech.DELAY_STAGE
-    area = n_stages * tech.DELAY_STAGE_AREA
-    energy = n_stages * 1.0e-15 * tp.vdd ** 2
-    leak = n_stages * 0.8 * INV_LEAK
-    return t_cycle, area, energy, leak
+    t_cycle_s = n_stages * tech.DELAY_STAGE
+    area_um2 = n_stages * tech.DELAY_STAGE_AREA
+    energy_j = n_stages * 1.0e-15 * tp.vdd ** 2
+    leak_a = n_stages * 0.8 * INV_LEAK
+    return t_cycle_s, area_um2, energy_j, leak_a
 
 
 def control(tp=None):

@@ -38,9 +38,9 @@ def leak_current(cell: bitcells.BitcellParams, v_sn, tp=None):
                                cell.write_dev.astype(jnp.int32))
     rdev = devices.take_device(bitcells.DEVICE_STACK,
                                cell.read_dev.astype(jnp.int32))
-    i_sub = devices.mosfet_id(wdev, 0.0, v_sn, cell.w_write, tp)
-    i_gate = rdev.j_gate * tp.leak_scale * cell.w_read * (v_sn / tp.vdd)
-    return i_sub + i_gate
+    i_sub_a = devices.mosfet_id(wdev, 0.0, v_sn, cell.w_write, tp)
+    i_gate_a = rdev.j_gate * tp.leak_scale * cell.w_read * (v_sn / tp.vdd)
+    return i_sub_a + i_gate_a
 
 
 def decay_curve(cell: bitcells.BitcellParams, v0, tp=None):
@@ -57,11 +57,11 @@ def decay_curve(cell: bitcells.BitcellParams, v0, tp=None):
         k2 = f(v + 0.5 * dt * k1)
         k3 = f(v + 0.5 * dt * k2)
         k4 = f(v + dt * k3)
-        v_new = v + dt / 6.0 * (k1 + 2 * k2 + 2 * k3 + k4)
-        return jnp.clip(v_new, 0.0, 2.0), v_new
+        v_new_v = v + dt / 6.0 * (k1 + 2 * k2 + 2 * k3 + k4)
+        return jnp.clip(v_new_v, 0.0, 2.0), v_new_v
 
     dts = jnp.diff(ts)
-    v_fin, vs = jax.lax.scan(step, jnp.asarray(v0, jnp.float32), dts)
+    _, vs = jax.lax.scan(step, jnp.asarray(v0, jnp.float32), dts)
     return ts, jnp.concatenate([jnp.asarray([v0], jnp.float32), vs])
 
 
@@ -79,9 +79,9 @@ def read_margin_threshold(cell: bitcells.BitcellParams,
                                cell.read_dev.astype(jnp.int32))
     grid = jnp.linspace(0.0, tp.vdd, 256)
     # |vgs| of the read device when SN sits at v: VDD - v
-    i_read = devices.mosfet_id(rdev, tp.vdd - grid, tp.vdd, cell.w_read, tp)
-    i_on0 = devices.mosfet_id(rdev, tp.vdd, tp.vdd, cell.w_read, tp)
-    ok = i_read <= false_read_ratio * i_on0          # high-enough SN region
+    i_read_a = devices.mosfet_id(rdev, tp.vdd - grid, tp.vdd, cell.w_read, tp)
+    i_on0_a = devices.mosfet_id(rdev, tp.vdd, tp.vdd, cell.w_read, tp)
+    ok = i_read_a <= false_read_ratio * i_on0_a          # high-enough SN region
     # lowest v on the grid that is still a safe '1'
     idx = jnp.argmax(ok)                             # first True
     return grid[idx]
@@ -94,17 +94,18 @@ def retention_time(cell: bitcells.BitcellParams, level_shift=0, tp=None):
     tp = corners.resolve(tp)
     v0 = bitcells.sn_high_level(cell, level_shift, tp)
     ts, vs = decay_curve(cell, v0, tp)
-    v_min = read_margin_threshold(cell, tp=tp)
-    crossed = vs < v_min
+    v_min_v = read_margin_threshold(cell, tp=tp)
+    crossed = vs < v_min_v
     idx = jnp.argmax(crossed)                       # first crossing (0 if none)
     any_cross = jnp.any(crossed)
     # log-linear interpolation between grid points
     i0 = jnp.maximum(idx - 1, 0)
     t0, t1 = ts[i0], ts[idx]
-    v_a, v_b = vs[i0], vs[idx]
-    frac = jnp.clip((v_a - v_min) / jnp.maximum(v_a - v_b, 1e-9), 0.0, 1.0)
-    t_cross = jnp.exp(jnp.log(t0) + frac * (jnp.log(t1) - jnp.log(t0)))
-    return jnp.where(any_cross, t_cross, ts[-1])
+    v_hi_v, v_lo_v = vs[i0], vs[idx]
+    frac = jnp.clip((v_hi_v - v_min_v) / jnp.maximum(v_hi_v - v_lo_v, 1e-9),
+                    0.0, 1.0)
+    t_cross_s = jnp.exp(jnp.log(t0) + frac * (jnp.log(t1) - jnp.log(t0)))
+    return jnp.where(any_cross, t_cross_s, ts[-1])
 
 
 def retention_estimate(cell: bitcells.BitcellParams, level_shift=0, tp=None):

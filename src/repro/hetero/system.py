@@ -73,24 +73,24 @@ def score_kernel(idx: jnp.ndarray, cols: Dict[str, jnp.ndarray],
     tiles = jnp.ceil(cap_bits[None, :] / bits)           # macros per slot
     inf = jnp.float32(jnp.inf)
 
-    area = jnp.sum(jnp.where(bad, inf, tiles * take("area_um2")), axis=1)
-    p_static = jnp.sum(
+    area_um2 = jnp.sum(jnp.where(bad, inf, tiles * take("area_um2")), axis=1)
+    p_static_w = jnp.sum(
         jnp.where(bad, inf,
                   tiles * (take("p_leak_w") + take("p_refresh_w"))), axis=1)
-    p_dyn = jnp.sum(jnp.where(bad, inf, take("e_read_j") * f_req[None, :]),
-                    axis=1)
+    p_dyn_w = jnp.sum(jnp.where(bad, inf, take("e_read_j") * f_req[None, :]),
+                      axis=1)
     bw_margin = jnp.min(
         jnp.where(bad, 0.0,
                   take("f_op_hz") / jnp.maximum(f_req[None, :], 1.0)), axis=1)
-    capacity = jnp.sum(jnp.where(bad, 0.0, tiles * bits), axis=1)
-    overprov = capacity / jnp.maximum(jnp.sum(cap_bits), 1.0)
+    capacity_bits = jnp.sum(jnp.where(bad, 0.0, tiles * bits), axis=1)
+    overprov = capacity_bits / jnp.maximum(jnp.sum(cap_bits), 1.0)
     return {
-        "area_um2": area,
-        "p_static_w": p_static,
-        "p_dyn_w": p_dyn,
-        "p_w": p_static + p_dyn,
+        "area_um2": area_um2,
+        "p_static_w": p_static_w,
+        "p_dyn_w": p_dyn_w,
+        "p_w": p_static_w + p_dyn_w,
         "bw_margin": bw_margin,
-        "capacity_bits": capacity,
+        "capacity_bits": capacity_bits,
         "overprovision": overprov,
     }
 
@@ -105,9 +105,9 @@ def tiles_for(metrics: Mapping[str, np.ndarray], idx: np.ndarray,
     disagree with the metrics priced from them."""
     bits = np.maximum(np.asarray(metrics["bits"], np.float32)[
         np.maximum(idx, 0)], np.float32(1.0))
-    cap = np.asarray(cap_bits, np.float32)
+    slot_cap_bits = np.asarray(cap_bits, np.float32)
     return np.where(idx < 0, 0,
-                    np.ceil(cap[None, :] / bits)).astype(np.int64)
+                    np.ceil(slot_cap_bits[None, :] / bits)).astype(np.int64)
 
 
 def score_grid(metrics: Mapping[str, np.ndarray], idx: np.ndarray,
@@ -124,13 +124,13 @@ def score_grid(metrics: Mapping[str, np.ndarray], idx: np.ndarray,
     global _eval_calls
     cols = {k: jnp.asarray(np.asarray(metrics[k]), jnp.float32)
             for k in METRIC_COLS}
-    idx_j = jnp.asarray(np.asarray(idx), jnp.int32)
-    cap = jnp.asarray(np.asarray(cap_bits), jnp.float32)
-    req = jnp.asarray(np.asarray(f_req), jnp.float32)
+    idx_dev = jnp.asarray(np.asarray(idx), jnp.int32)
+    slot_cap_bits = jnp.asarray(np.asarray(cap_bits), jnp.float32)
+    slot_f_req_hz = jnp.asarray(np.asarray(f_req), jnp.float32)
     if sharded:
-        out = shard_leading(_score_jit, idx_j, cols, cap, req,
-                            devices=devices)
+        out = shard_leading(_score_jit, idx_dev, cols, slot_cap_bits,
+                            slot_f_req_hz, devices=devices)
     else:
-        out = _score_jit(idx_j, cols, cap, req)
+        out = _score_jit(idx_dev, cols, slot_cap_bits, slot_f_req_hz)
     _eval_calls += 1
     return {k: np.asarray(v) for k, v in out.items()}

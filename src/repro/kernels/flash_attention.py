@@ -11,6 +11,7 @@ Tile sizes default to (128, 128) q x kv — MXU-aligned for head_dim >= 64.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -69,7 +70,9 @@ def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
     """q,k,v (B,H,S,D) -> (B,H,S,D). Forward-only (serving path)."""
     B, H, S, D = q.shape
     Sk = k.shape[2]
-    scale = 1.0 / float(jnp.sqrt(jnp.asarray(D, jnp.float32)))
+    # D is a static shape int: host math, no device round-trip (the previous
+    # float(jnp.sqrt(...)) forced a sync before the kernel even launched)
+    scale = 1.0 / math.sqrt(D)
     block_q = min(block_q, S)
     block_k = min(block_k, Sk)
     assert S % block_q == 0 and Sk % block_k == 0, "pad sequence to block size"

@@ -1,0 +1,454 @@
+"""The repro.analysis static analyzer: per-rule good/bad/suppressed fixtures
+(tmp-tree projects for JP/US/BK, source overlays on the real repo for CK),
+baseline + noqa mechanics, exit-code bitmask, docs checks, the CLI, and the
+meta-test that the live codebase is clean against the committed baseline.
+
+The two regression guards the issue names explicitly:
+
+* a synthetic field added to ``OperatingPoint`` (the PR-5 bug class) must
+  surface as CK01 because ``fingerprint()`` enumerates fields by hand;
+* deleting the ``corners_fingerprint`` ingredient from ``api.grid_hash``
+  must surface as CK02 + CK03 (the stated acceptance criterion).
+
+No jax import anywhere here — the analyzer is stdlib-only by design.
+"""
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (EXIT_BITS, FAMILIES, RULES, Baseline, Finding,
+                            Project, run_analysis)
+from repro.analysis import backend_cov, cache_keys, jit_purity, units
+from repro.analysis import docs as docs_mod
+from repro.analysis.__main__ import main
+from repro.analysis.findings import is_suppressed, noqa_rules
+from repro.analysis.rules import family_of
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _read(rel):
+    return (ROOT / rel).read_text(encoding="utf-8")
+
+
+def _overlay(rel, old, new):
+    """Project over the real repo with one source mutation injected."""
+    src = _read(rel)
+    assert old in src, f"anchor drifted in {rel}: {old!r}"
+    return Project(ROOT, overlay={rel: src.replace(old, new)})
+
+
+def _write_tree(root, files):
+    for rel, body in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(body), encoding="utf-8")
+    return root
+
+
+# ------------------------------------------------------------------ rules
+def test_rule_catalog_shape():
+    assert set(EXIT_BITS) == set(FAMILIES)
+    # bits are distinct powers of two -> the exit code is a readable bitmask
+    assert len({EXIT_BITS[f] for f in FAMILIES}) == len(FAMILIES)
+    for rid, entry in RULES.items():
+        assert family_of(rid) in FAMILIES, rid
+        title, summary = entry
+        assert title and summary
+
+
+# ------------------------------------------------- CK: cache-key coverage
+def test_ck_live_repo_clean():
+    assert cache_keys.check(Project(ROOT)) == []
+
+
+def test_ck01_new_operating_point_field_caught():
+    """PR-5 bug class: OperatingPoint.fingerprint() enumerates its fields by
+    hand, so a new physics knob silently reuses stale caches unless the
+    analyzer catches the drift."""
+    project = _overlay(
+        "src/repro/core/corners.py",
+        '    corner: str = "nominal"',
+        '    corner: str = "nominal"\n    body_bias_v: float = 0.0')
+    rules = {f.rule for f in cache_keys.check(project)}
+    assert "CK01" in rules
+    msgs = [f.message for f in cache_keys.check(project) if f.rule == "CK01"]
+    assert any("body_bias_v" in m for m in msgs)
+
+
+def test_ck_asdict_keyed_policy_field_is_covered():
+    """report_key hashes dataclasses.asdict(policy) — full coverage — so a
+    new SelectionPolicy field must NOT flag (no false positive)."""
+    project = _overlay(
+        "src/repro/core/select.py",
+        "    allow_refresh: bool = False\n"
+        "    refresh_power_frac: float = 0.1",
+        "    allow_refresh: bool = False\n"
+        "    refresh_power_frac: float = 0.1\n"
+        "    synthetic_knob: float = 1.0")
+    assert cache_keys.check(project) == []
+
+
+def test_ck_grid_hash_corners_removal_caught():
+    """Acceptance criterion: deleting the corners ingredient from
+    api.grid_hash must be flagged."""
+    project = _overlay(
+        "src/repro/api.py",
+        "    h.update(corners_mod.corners_fingerprint(\n"
+        "        corners_mod.as_corners(corners)).encode())\n",
+        "")
+    found = cache_keys.check(project)
+    rules = {f.rule for f in found}
+    assert "CK03" in rules       # ingredient corners_fingerprint gone
+    assert "CK02" in rules       # parameter `corners` now dead
+    assert any("corners_fingerprint" in f.message for f in found)
+
+
+def test_ck_exit_bit_through_runner():
+    project = _overlay(
+        "src/repro/core/corners.py",
+        '    corner: str = "nominal"',
+        '    corner: str = "nominal"\n    body_bias_v: float = 0.0')
+    report = run_analysis(ROOT, checks=("CK",), project=project)
+    assert report.exit_code == EXIT_BITS["CK"]
+
+
+# ------------------------------------------------------ JP: jit purity
+def _jp_root(tmp_path, body):
+    return _write_tree(tmp_path, {
+        "src/repro/core/toy.py": "import jax\nimport jax.numpy as jnp\n"
+                                 + textwrap.dedent(body)})
+
+
+def test_jp_clean_fixture(tmp_path):
+    root = _jp_root(tmp_path, """
+        def good(x):
+            y = jnp.sum(x) * 2.0
+            return jnp.where(y > 0, y, 0.0)
+
+        good_jit = jax.jit(good)
+        """)
+    assert jit_purity.check(Project(root)) == []
+
+
+def test_jp_bad_fixture_all_rules(tmp_path):
+    root = _jp_root(tmp_path, """
+        def bad(x, opts=[1, 2]):
+            y = jnp.sum(x)
+            if y > 0:
+                z = y * 2
+            print(x)
+            v = y.item()
+            return float(y) + v
+
+        bad_jit = jax.jit(bad, static_argnums=(1,))
+        """)
+    found = jit_purity.check(Project(root))
+    rules = sorted(f.rule for f in found)
+    assert "JP01" in rules                   # print
+    assert rules.count("JP02") == 2          # .item() and float(traced)
+    assert "JP03" in rules                   # if on traced local
+    assert "JP04" in rules                   # unhashable static default
+
+
+def test_jp_unreachable_function_not_linted(tmp_path):
+    """Only jit-reachable functions are linted — host-side helpers may
+    print and sync freely."""
+    root = _jp_root(tmp_path, """
+        def host_only(x):
+            print(x)
+            return float(jnp.sum(x))
+        """)
+    assert jit_purity.check(Project(root)) == []
+
+
+def test_jp_type_guard_branch_skipped(tmp_path):
+    """isinstance/hasattr branches resolve at trace time — code inside them
+    never sees a tracer and must not flag."""
+    root = _jp_root(tmp_path, """
+        def guarded(x, tp=None):
+            if tp is None:
+                tp = 1.0
+            if isinstance(x, int):
+                print("static path")
+            return jnp.sum(x) * tp
+
+        guarded_jit = jax.jit(guarded)
+        """)
+    assert jit_purity.check(Project(root)) == []
+
+
+def test_jp_reachability_through_call_edges(tmp_path):
+    """A violation inside a helper only called from a jitted function is
+    still found (BFS over same-package call edges)."""
+    root = _jp_root(tmp_path, """
+        def helper(y):
+            return y.item()
+
+        def entry(x):
+            return helper(jnp.sum(x))
+
+        entry_jit = jax.jit(entry)
+        """)
+    found = jit_purity.check(Project(root))
+    assert [f.rule for f in found] == ["JP02"]
+    assert "helper" in found[0].message
+
+
+def test_jp_noqa_suppression_via_runner(tmp_path):
+    root = _jp_root(tmp_path, """
+        def bad(x):
+            return float(jnp.sum(x))  # noqa: JP02
+
+        bad_jit = jax.jit(bad)
+        """)
+    report = run_analysis(root, checks=("JP",))
+    assert report.findings == []
+    assert [f.rule for f in report.suppressed] == ["JP02"]
+    assert report.exit_code == 0
+
+
+# ------------------------------------------------------ US: unit suffixes
+def _us_root(tmp_path, body):
+    # units.TARGETS is a fixed list of physics modules; plant the fixture at
+    # one of those paths inside a tmp tree
+    return _write_tree(tmp_path, {"src/repro/core/periphery.py":
+                                  textwrap.dedent(body)})
+
+
+def test_us_clean_fixture(tmp_path):
+    root = _us_root(tmp_path, """
+        C_GATE_PER_UM = 1e-15          # per-unit constant: never suffix-typed
+
+        def stage(width_um, c_load_f, r_drv_ohm):
+            area_um2 = width_um * width_um
+            t_rc_s = r_drv_ohm * c_load_f
+            f_max_hz = 1.0 / t_rc_s
+            guard = width_um + 1e-9    # literal wildcard: no unit mix
+            return area_um2, t_rc_s, f_max_hz, guard
+        """)
+    findings = [f for f in units.check(Project(root)) if f.rule != "US01"
+                or "guard" not in f.snippet]
+    assert [f for f in findings if f.rule in ("US02", "US03")] == []
+
+
+def test_us_bad_fixture_all_rules(tmp_path):
+    root = _us_root(tmp_path, """
+        def stage(width_um, t_step_s):
+            area = width_um * width_um       # US01: word prefix, no suffix
+            t_bad_hz = t_step_s              # US03: suffix vs prefix/RHS
+            mix_s = width_um + t_step_s      # US02: um + s
+            return area, t_bad_hz, mix_s
+        """)
+    rules = {f.rule for f in units.check(Project(root))}
+    assert {"US01", "US02", "US03"} <= rules
+
+
+def test_us_inferable_rhs_triggers_us01(tmp_path):
+    root = _us_root(tmp_path, """
+        def stage(c_load_f, v_swing_v):
+            charge = c_load_f * v_swing_v    # inferable coulombs-class unit
+            return charge
+        """)
+    found = units.check(Project(root))
+    assert any(f.rule == "US01" and "charge" in f.snippet for f in found)
+
+
+def test_us_noqa_suppression_via_runner(tmp_path):
+    root = _us_root(tmp_path, """
+        def stage(width_um):
+            area = width_um * width_um  # noqa: US01
+            return area
+        """)
+    report = run_analysis(root, checks=("US",))
+    assert report.findings == []
+    assert [f.rule for f in report.suppressed] == ["US01"]
+
+
+def test_us_live_targets_clean():
+    assert units.check(Project(ROOT)) == []
+
+
+# ------------------------------------------- BK: backend registry coverage
+_BK_TREE = {
+    "src/repro/kernels/toyops.py": """
+        from repro.kernels.backend import register
+
+        register("toy_full", tpu=None, interpret=None, xla=None)
+        register("toy_naked", tpu=None)
+        """,
+    "src/repro/configs/models.py": """
+        from repro.configs.base import register
+
+        register("toy-model-7b")
+        """,
+    "tests/test_toy.py": """
+        def test_toy_full():
+            assert "toy_full"
+        """,
+}
+
+
+def test_bk_rules_and_registry_scoping(tmp_path):
+    """toy_naked: missing interpret (BK01), missing xla (BK02), untested
+    (BK03). toy_full: fully covered. The model-config registry's register()
+    is a different contract and must not flag."""
+    root = _write_tree(tmp_path, _BK_TREE)
+    found = backend_cov.check(Project(root))
+    by_rule = {}
+    for f in found:
+        by_rule.setdefault(f.rule, []).append(f)
+    assert set(by_rule) == {"BK01", "BK02", "BK03"}
+    for fs in by_rule.values():
+        assert len(fs) == 1 and "toy_naked" in fs[0].message
+    assert all("configs" not in f.path for f in found)
+
+
+def test_bk_live_repo_clean():
+    assert backend_cov.check(Project(ROOT)) == []
+
+
+# ------------------------------------------------------------ DC: docs
+def test_dc_broken_link_and_anchor(tmp_path):
+    _write_tree(tmp_path, {
+        "docs/GOOD.md": """
+            # Title
+
+            ## Real Section
+
+            [ok](GOOD.md#real-section) [also ok](BAD.md)
+            """,
+        "docs/BAD.md": """
+            [gone](NOPE.md) and [bad anchor](GOOD.md#no-such-section)
+            """,
+    })
+    found = docs_mod.check_links(tmp_path, files=["docs/GOOD.md",
+                                                  "docs/BAD.md"])
+    rules = sorted(d["rule"] for d in found)
+    assert rules == ["DC01", "DC02"]
+    assert all(d["path"] == "docs/BAD.md" for d in found)
+
+
+def test_dc_rule_catalog_must_document_every_rule(tmp_path):
+    _write_tree(tmp_path, {"docs/ANALYSIS.md": "only CK01 is described\n"})
+    found = docs_mod.check_rule_docs(tmp_path, ["CK01", "US01"])
+    assert [d["rule"] for d in found] == ["DC03"]
+    assert "US01" in found[0]["message"]
+
+
+def test_dc_live_docs_clean():
+    report = run_analysis(ROOT, checks=(), with_docs=True)
+    assert report.findings == [], report.format_text()
+
+
+# ------------------------------------------------- baseline + noqa mechanics
+def test_noqa_parsing():
+    assert noqa_rules("x = 1") is None
+    assert noqa_rules("x = 1  # noqa") == frozenset()
+    assert noqa_rules("x = 1  # noqa: US01") == {"US01"}
+    assert noqa_rules("x = 1  # NOQA: us01, jp02") == {"US01", "JP02"}
+    f = Finding("US01", "a.py", 1, "m")
+    assert is_suppressed(f, "x  # noqa")
+    assert is_suppressed(f, "x  # noqa: US01,CK02")
+    assert not is_suppressed(f, "x  # noqa: CK02")
+    assert not is_suppressed(f, "x")
+
+
+def test_baseline_roundtrip_and_snippet_matching(tmp_path):
+    f1 = Finding("US01", "src/a.py", 10, "msg", snippet="area = w * w")
+    f2 = Finding("JP02", "src/b.py", 3, "msg", snippet="v = y.item()")
+    path = tmp_path / "baseline.json"
+    Baseline.write(path, [f1], {f1.key(): "deliberate: legacy name"})
+    b = Baseline.load(path)
+    assert b.entries[0]["justification"] == "deliberate: legacy name"
+
+    # snippet-matched: the same finding at a shifted line still matches...
+    shifted = Finding("US01", "src/a.py", 99, "msg", snippet="area = w * w")
+    active, baselined = b.split([shifted, f2])
+    assert active == [f2] and baselined == [shifted]
+    # ...an edited line does not (resurfaces for re-review)
+    edited = Finding("US01", "src/a.py", 10, "msg", snippet="area = w * h")
+    assert b.split([edited])[0] == [edited]
+    # entries matching nothing are reported stale
+    assert b.stale_entries([f2]) == b.entries
+
+
+def test_baseline_missing_file_is_empty(tmp_path):
+    b = Baseline.load(tmp_path / "nope.json")
+    f = Finding("US01", "a.py", 1, "m")
+    assert b.split([f]) == ([f], [])
+    assert b.stale_entries([]) == []
+
+
+def test_exit_code_bitmask_composes(tmp_path):
+    root = _write_tree(tmp_path, {
+        "src/repro/core/toy.py": """
+            import jax
+            import jax.numpy as jnp
+
+            def bad(x):
+                return float(jnp.sum(x))
+
+            bad_jit = jax.jit(bad)
+            """,
+        "src/repro/core/periphery.py": """
+            def stage(width_um):
+                area = width_um * width_um
+                return area
+            """,
+    })
+    report = run_analysis(root, checks=("JP", "US"))
+    assert report.exit_code == EXIT_BITS["JP"] | EXIT_BITS["US"]
+
+
+# ------------------------------------------------------------------- CLI
+def test_cli_json_live_repo_clean(tmp_path, capsys):
+    out = tmp_path / "report.json"
+    code = main(["--root", str(ROOT), "--docs", "--format=json",
+                 "--out", str(out)])
+    assert code == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["exit_code"] == 0
+    assert payload["counts"]["active"] == 0
+    # --out writes the same report for the CI artifact
+    assert json.loads(out.read_text())["counts"] == payload["counts"]
+
+
+def test_cli_list_rules(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in RULES:
+        assert rid in out
+
+
+def test_cli_nonzero_on_violations_and_write_baseline(tmp_path, capsys):
+    root = _write_tree(tmp_path, {"src/repro/core/periphery.py": """
+        def stage(width_um):
+            area = width_um * width_um
+            return area
+        """})
+    code = main(["--root", str(root), "--rules", "US"])
+    capsys.readouterr()
+    assert code == EXIT_BITS["US"]
+    # snapshotting the findings into the baseline makes the run clean
+    assert main(["--root", str(root), "--rules", "US",
+                 "--write-baseline"]) == 0
+    capsys.readouterr()
+    assert main(["--root", str(root), "--rules", "US"]) == 0
+
+
+def test_cli_rejects_unknown_family():
+    with pytest.raises(SystemExit):
+        main(["--rules", "ZZ"])
+
+
+# ------------------------------------------------------------- meta-test
+def test_live_repo_clean_against_committed_baseline():
+    """The whole analyzer over the real tree: zero active findings against
+    the committed baseline, no stale baseline entries."""
+    report = run_analysis(ROOT, with_docs=True)
+    assert report.findings == [], report.format_text()
+    assert report.exit_code == 0
+    assert report.stale_baseline == []

@@ -209,6 +209,27 @@ def test_sentinel_slot_prices_inf(table):
     assert np.isfinite(out["phases"]["decode"]["e_total_j"][0])
 
 
+def test_sim_replay_backend_registration():
+    """The grid replay kernel is a first-class backend op: 'sim_replay'
+    must stay registered with both the vmapped xla path and the python-loop
+    interpret oracle, and dispatch must route a toy grid through the
+    registry to the same numbers simulate_traces produces."""
+    assert "sim_replay" in kbackend.registered()
+    avail = kbackend.available_backends("sim_replay")
+    assert "interpret" in avail and "xla" in avail
+    assert (kbackend.get_impl("sim_replay", "xla")
+            is not kbackend.get_impl("sim_replay", "interpret"))
+    task = _one_slot_task()
+    tr = phase_trace(task, "decode")
+    idx = np.array([[0]], np.int32)
+    via_facade = simulate_traces(_toy_cols(), idx, [tr], backend="xla")
+    with kbackend.use_backend("interpret"):
+        via_registry = simulate_traces(_toy_cols(), idx, [tr])
+    for m in SIM_METRICS:
+        np.testing.assert_array_equal(via_facade[m], via_registry[m],
+                                      err_msg=m)
+
+
 def test_use_backend_context_overrides_env():
     assert kbackend.resolve_backend("interpret") == "interpret"
     with kbackend.use_backend("interpret"):
