@@ -9,8 +9,16 @@ hand (see docs/ANALYSIS.md for the rule catalog):
   BK  backend-registry coverage — every kernel op has oracle + fallback + test
   DC  docs — links, anchors, and the rule catalog itself
 
-Run ``python -m repro.analysis`` (see ``__main__.py`` for the CLI). The
-package imports no jax/numpy — it parses sources, never imports them.
+A second, *semantic* tier (``--semantic``) verifies the traced IR itself —
+PB proves Pallas BlockSpec index maps over the full launch grid, DT audits
+jaxpr dtypes against the float32 policy, RC meters jit trace-cache growth
+against committed budgets. It lives in ``repro.analysis.semantic``, imports
+jax, and is loaded lazily: the default AST run (and pre-commit) stays
+jax-free — it parses sources, never imports them. ``repro.analysis.sanitize``
+is the matching runtime tier: opt-in checkify (nan + index) wrapping of the
+numeric entry points via ``REPRO_SANITIZE=1`` / ``Compiler(sanitize=True)``.
+
+Run ``python -m repro.analysis`` (see ``__main__.py`` for the CLI).
 """
 from repro.analysis.astutil import Project
 from repro.analysis.findings import Baseline, Finding

@@ -3,12 +3,16 @@
     python -m repro.analysis                    # human output, exit bitmask
     python -m repro.analysis --format=json      # machine-readable report
     python -m repro.analysis --docs             # + link/anchor/rule-doc checks
+    python -m repro.analysis --semantic         # + IR tier (PB/DT/RC; needs jax)
     python -m repro.analysis --rules CK,US      # restrict to families
     python -m repro.analysis --write-baseline   # snapshot current findings
+    python -m repro.analysis --prune-baseline   # drop stale baseline entries
     python -m repro.analysis --list-rules       # rule catalog
 
-Exit code is the OR of the family bits (CK=1 JP=2 US=4 BK=8 DC=16) of every
-*active* finding — 0 means clean against the committed baseline.
+Exit code is the OR of the family bits (CK=1 JP=2 US=4 BK=8 DC=16 PB=32
+DT=64 RC=128) of every *active* finding — 0 means clean against the
+committed baseline. The default run is AST-only and jax-free (pre-commit
+safe); ``--semantic`` adds the traced-IR tier and belongs in CI.
 """
 from __future__ import annotations
 
@@ -40,6 +44,13 @@ def main(argv=None) -> int:
     ap.add_argument("--docs", action="store_true",
                     help="also run the DC docs checks (links, anchors, "
                          "rule catalog)")
+    ap.add_argument("--semantic", action="store_true",
+                    help="also run the IR-level PB/DT/RC tier (imports jax "
+                         "and executes the jit sites — CI-only, slow)")
+    ap.add_argument("--prune-baseline", action="store_true",
+                    help="rewrite the baseline file dropping entries that "
+                         "no longer match any finding of a family that ran "
+                         "in this invocation, then exit 0")
     ap.add_argument("--rules", default=None,
                     help="comma-separated rule families to run "
                          f"(default: all of {','.join(FAMILIES)})")
@@ -62,13 +73,21 @@ def main(argv=None) -> int:
     baseline = Path(args.baseline) if args.baseline else None
 
     report = run_analysis(root, checks=checks, baseline_path=baseline,
-                          with_docs=args.docs)
+                          with_docs=args.docs, with_semantic=args.semantic)
 
     if args.write_baseline:
         path = baseline or (root / DEFAULT_BASELINE)
         Baseline.write(path, report.findings + report.baselined)
         print(f"wrote {len(report.findings) + len(report.baselined)} "
               f"entr(y/ies) to {path}")
+        return 0
+
+    if args.prune_baseline:
+        path = baseline or (root / DEFAULT_BASELINE)
+        kept, dropped = prune_baseline(path, report)
+        print(f"pruned {dropped} stale entr(y/ies) from {path} "
+              f"({kept} kept; families run: "
+              f"{','.join(report.families_run) or 'none'})")
         return 0
 
     if args.out:
@@ -80,6 +99,26 @@ def main(argv=None) -> int:
     else:
         print(report.format_text())
     return report.exit_code
+
+
+def prune_baseline(path, report) -> tuple:
+    """Rewrite the baseline at ``path`` dropping stale entries.
+
+    Only entries whose rule family actually *ran* in this invocation are
+    prunable — a CK-only run must not delete PB entries it never
+    re-checked. Returns (kept, dropped) counts.
+    """
+    baseline = Baseline.load(path)
+    stale_keys = {(e["rule"], e["path"], e.get("snippet", ""))
+                  for e in report.stale_baseline
+                  if family_of(e["rule"]) in report.families_run}
+    keep = [e for e in baseline.entries
+            if (e["rule"], e["path"], e.get("snippet", "")) not in stale_keys]
+    dropped = len(baseline.entries) - len(keep)
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"entries": keep}, fh, indent=2)
+        fh.write("\n")
+    return len(keep), dropped
 
 
 def _detect_root() -> Path:

@@ -13,6 +13,12 @@ the unit of the CLI exit-code bitmask (see ``EXIT_BITS``):
   US  unit-suffix convention    (physics-layer naming + unit algebra)
   BK  backend-registry coverage (kernels.backend ops: impls + tests)
   DC  docs                      (intra-repo links, anchors, rule catalog)
+
+Semantic tier (``--semantic``, imports jax — CI-only, never pre-commit):
+
+  PB  Pallas block verifier     (BlockSpec index maps proved over the grid)
+  DT  dtype / weak-type drift   (jaxprs of the jit entry points vs policy)
+  RC  recompilation cavity      (trace-cache growth vs committed budgets)
 """
 from __future__ import annotations
 
@@ -69,14 +75,59 @@ RULES = {
              "a markdown link targets a #anchor with no matching heading"),
     "DC03": ("rule-undocumented",
              "an analyzer rule ID is not documented in docs/ANALYSIS.md"),
+    "PB01": ("pallas-block-out-of-bounds",
+             "a BlockSpec index_map addresses a block outside the (padded) "
+             "operand for some point of the launch grid"),
+    "PB02": ("pallas-output-gap",
+             "the output BlockSpec does not tile the output exactly — some "
+             "output block is never written by any grid point"),
+    "PB03": ("pallas-output-race",
+             "two grid points differing in a 'parallel' grid axis write the "
+             "same output block (a write race; revisits are only legal "
+             "along 'arbitrary' axes)"),
+    "PB04": ("pallas-grid-order-mismatch",
+             "grid-axis ordering is inconsistent: dimension_semantics / "
+             "index_map arity differs from the grid, or a grid axis maps "
+             "identity-style onto a block dim whose block count differs "
+             "from the axis extent"),
+    "PB05": ("pallas-op-unprofiled",
+             "an op registered with a tpu impl has no PB shape profile (or "
+             "a profiled op/function no longer exists — the spec rotted)"),
+    "DT01": ("dtype-policy-violation",
+             "a traced jit entry point manufactures a dtype outside the "
+             "declared policy (float64/float16/complex promotion)"),
+    "DT02": ("weak-type-output",
+             "a jit entry point returns a weak-typed float — a Python "
+             "scalar leaked through and the output dtype is "
+             "promotion-fragile"),
+    "DT03": ("int-accumulation-overflow",
+             "an integer accumulation (reduce_sum/cumsum/dot) runs in a "
+             "sub-32-bit dtype — overflow-prone at benchmark sizes"),
+    "DT04": ("dt-spec-rot",
+             "a DT entry-point spec no longer resolves (module/attr gone or "
+             "drive inputs fail to build) — the checker silently lost "
+             "coverage"),
+    "RC01": ("recompile-budget-exceeded",
+             "driving a jit site with its benchmark (shape, static-arg) "
+             "profiles grew the trace cache beyond the committed budget"),
+    "RC02": ("cache-thrash-on-repeat",
+             "re-driving a jit site with identical profiles added new trace "
+             "cache entries — the cache key is unstable (static-arg leak)"),
+    "RC03": ("jit-site-unbudgeted",
+             "a module-level jax.jit site in core/hetero/sim is not covered "
+             "by the RC budget spec — its compile count is unwatched"),
+    "RC04": ("rc-spec-rot",
+             "an RC budget-spec entry no longer resolves (module/attr gone, "
+             "no cache-size API, or the driver failed)"),
 }
 
-FAMILIES = ("CK", "JP", "US", "BK", "DC")
+FAMILIES = ("CK", "JP", "US", "BK", "DC", "PB", "DT", "RC")
 
 # exit-code bitmask per family: the CLI exits with the OR of the bits of
 # every family that produced at least one active (unsuppressed, unbaselined)
 # finding. 0 = clean.
-EXIT_BITS = {"CK": 1, "JP": 2, "US": 4, "BK": 8, "DC": 16}
+EXIT_BITS = {"CK": 1, "JP": 2, "US": 4, "BK": 8, "DC": 16,
+             "PB": 32, "DT": 64, "RC": 128}
 
 
 def family_of(rule_id: str) -> str:

@@ -20,6 +20,11 @@ CHECKERS = {
     "BK": backend_cov.check,
 }
 
+# The semantic tier (imports jax, traces IR, executes jit sites) is opt-in
+# via --semantic / explicit --rules and loaded lazily so that plain AST runs
+# — and pre-commit — never pay the jax import.
+SEMANTIC_FAMILIES = ("PB", "DT", "RC")
+
 
 @dataclasses.dataclass
 class Report:
@@ -27,6 +32,7 @@ class Report:
     suppressed: List[Finding]          # silenced by inline  # noqa
     baselined: List[Finding]           # matched a committed baseline entry
     stale_baseline: List[dict]         # baseline entries matching nothing
+    families_run: tuple = ()           # which rule families actually ran
 
     @property
     def exit_code(self) -> int:
@@ -42,6 +48,7 @@ class Report:
                 by_family.get(family_of(f.rule), 0) + 1
         return {
             "exit_code": self.exit_code,
+            "families_run": list(self.families_run),
             "counts": {"active": len(self.findings),
                        "suppressed": len(self.suppressed),
                        "baselined": len(self.baselined),
@@ -71,26 +78,40 @@ class Report:
 
 def run_analysis(root, checks: Optional[Sequence[str]] = None,
                  baseline_path=None, with_docs: bool = False,
+                 with_semantic: bool = False,
                  project: Optional[Project] = None) -> Report:
     """Run the analyzer over the repo at ``root``.
 
     ``checks`` restricts to rule families (("CK", "US"), ...); ``with_docs``
-    adds the DC family; ``project`` injects a pre-built (possibly overlaid)
-    Project — the hook the analyzer's own tests use to mutate sources.
+    adds the DC family; ``with_semantic`` adds the IR-level PB/DT/RC tier
+    (imports jax — CI-only); ``project`` injects a pre-built (possibly
+    overlaid) Project — the hook the analyzer's own tests use to mutate
+    sources.
     """
     root = Path(root)
     if project is None:
         project = Project(root)
     selected = tuple(checks) if checks else tuple(CHECKERS)
+    if with_semantic:
+        selected += tuple(f for f in SEMANTIC_FAMILIES if f not in selected)
+    families_run: List[str] = []
     raw: List[Finding] = []
     for fam in selected:
         if fam in CHECKERS:
             raw.extend(CHECKERS[fam](project))
+            families_run.append(fam)
+    semantic_selected = tuple(f for f in selected if f in SEMANTIC_FAMILIES)
+    if semantic_selected:
+        from repro.analysis import semantic   # lazy: imports jax
+        for fam in semantic_selected:
+            raw.extend(semantic.CHECKERS[fam](project))
+            families_run.append(fam)
     if with_docs or (checks and "DC" in checks):
         for d in docs_mod.check_links(root):
             raw.append(Finding(**d))
         for d in docs_mod.check_rule_docs(root, sorted(RULES)):
             raw.append(Finding(**d))
+        families_run.append("DC")
 
     # inline noqa
     kept: List[Finding] = []
@@ -107,4 +128,5 @@ def run_analysis(root, checks: Optional[Sequence[str]] = None,
     active, baselined = baseline.split(kept)
     return Report(findings=active, suppressed=suppressed,
                   baselined=baselined,
-                  stale_baseline=baseline.stale_entries(kept))
+                  stale_baseline=baseline.stale_entries(kept),
+                  families_run=tuple(families_run))

@@ -1,0 +1,73 @@
+"""Opt-in runtime sanitizer: checkify wrapping of the numeric entry points.
+
+The static tiers prove structural properties; this shim catches the
+*value-level* failures they cannot — NaN/Inf appearing mid-pipeline and
+out-of-bounds gathers — by running the characterization / composition /
+simulation entry points under ``jax.experimental.checkify`` with
+``nan_checks | index_checks``. First error wins and raises
+``JaxRuntimeError`` with the offending primitive's traceback.
+
+Two switches, innermost wins:
+
+  ``REPRO_SANITIZE=1``            process-wide (the opt-in CI job)
+  ``Compiler(sanitize=True)``     per-instance, via ``enabled_scope``
+
+Off (the default) the wrapped entry points call the original jitted
+functions untouched — zero overhead, bit-identical results. On, checkify
+re-traces with error plumbing threaded through, so outputs stay numerically
+identical but compile caches are separate; never enable it under the RC
+recompilation audit.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+from typing import List, Optional
+
+_FORCED: List[bool] = []     # enabled_scope() overrides, innermost last
+
+
+def enabled(explicit: Optional[bool] = None) -> bool:
+    """Is the sanitizer on? ``explicit`` beats scopes beats the env var."""
+    if explicit is not None:
+        return bool(explicit)
+    if _FORCED:
+        return _FORCED[-1]
+    return os.environ.get("REPRO_SANITIZE") == "1"
+
+
+@contextlib.contextmanager
+def enabled_scope(on: bool = True):
+    """Force the sanitizer on/off inside the block (nests; innermost wins)."""
+    _FORCED.append(bool(on))
+    try:
+        yield
+    finally:
+        _FORCED.pop()
+
+
+def wrap(fn):
+    """Checkify ``fn`` (nan + index errors) and raise on the first hit.
+
+    The wrapper keeps ``fn``'s signature and return value; the checkify
+    error is consumed by ``throw()`` so callers never see the (err, out)
+    pair.
+    """
+    from jax.experimental import checkify
+    checked = checkify.checkify(
+        fn, errors=checkify.nan_checks | checkify.index_checks)
+
+    @functools.wraps(fn)
+    def sanitized(*args, **kwargs):
+        err, out = checked(*args, **kwargs)
+        err.throw()
+        return out
+
+    sanitized.__sanitized__ = True
+    return sanitized
+
+
+def maybe_wrap(fn, explicit: Optional[bool] = None):
+    """``wrap(fn)`` when the sanitizer is enabled, else ``fn`` unchanged."""
+    return wrap(fn) if enabled(explicit) else fn

@@ -1,0 +1,20 @@
+"""Semantic (IR-level) analyzer tier: PB / DT / RC.
+
+Unlike the AST tier this package imports jax, traces jaxprs, and executes
+jit sites — it is CI-only (``python -m repro.analysis --semantic``), never
+part of pre-commit. ``repro.analysis`` itself must stay importable without
+jax, so nothing here is imported at package-import time: the runner pulls
+in ``repro.analysis.semantic`` lazily only when the semantic families are
+requested.
+"""
+from __future__ import annotations
+
+from repro.analysis.semantic import dt, pb, rc
+
+CHECKERS = {
+    "PB": pb.check,
+    "DT": dt.check,
+    "RC": rc.check,
+}
+
+__all__ = ["CHECKERS", "pb", "dt", "rc"]

@@ -1,0 +1,249 @@
+"""DT — dtype / weak-type drift audit over traced jaxprs (semantic tier).
+
+Traces the public jit entry points of core/hetero/sim with
+``jax.make_jaxpr`` under representative inputs and checks every abstract
+value (recursing into pjit/scan/cond sub-jaxprs) against the repo's dtype
+policy:
+
+  DT01  a dtype outside the policy appears anywhere in the trace
+        (float64/float16/complex promotion — silent precision drift)
+  DT02  a top-level output is a weak-typed float: a Python scalar leaked
+        through to the boundary, so downstream promotion depends on call
+        context instead of the declared dtype
+  DT03  an integer accumulation (reduce_sum / cumsum / dot) runs in a
+        sub-32-bit dtype
+  DT04  spec rot: an entry point or its input builder no longer resolves
+
+The physics pipeline is float32 end to end (Table-2 bit-exactness depends
+on it); int32/bool/uint32 cover indices, masks and counters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+from repro.analysis.findings import Finding
+
+ALLOWED_DTYPES = frozenset(
+    {"float32", "bfloat16", "int32", "int64", "uint32", "uint64", "bool"})
+
+_ACCUM_PRIMS = frozenset({"reduce_sum", "cumsum", "dot_general", "add_any"})
+_NARROW_INTS = frozenset({"int8", "int16", "uint8", "uint16"})
+
+
+# ---------------------------------------------------------------------------
+# entry-point spec: how to build trace-shaped inputs for each jit site
+# ---------------------------------------------------------------------------
+
+
+def _build_characterize_batch():
+    import jax.numpy as jnp
+    from repro.core.macro import MacroConfig
+    cfgs = [MacroConfig(mem_type="gc_sisi", word_size=16, num_words=16),
+            MacroConfig(mem_type="sram6t", word_size=32, num_words=64)]
+    return (jnp.stack([c.to_vector() for c in cfgs]),), {}
+
+
+def _build_characterize_corners_batch():
+    import jax.numpy as jnp
+    from repro.core import corners
+    from repro.core.macro import MacroConfig
+    cfgs = [MacroConfig(mem_type="gc_sisi", word_size=16, num_words=16),
+            MacroConfig(mem_type="gc_ossi", word_size=32, num_words=32)]
+    vecs = jnp.stack([c.to_vector() for c in cfgs])
+    tps = corners.stack_tech([corners.as_operating_point(n)
+                              for n in ("nominal", "hot")])
+    return (vecs, tps), {}
+
+
+def _build_retention_time_batch():
+    import jax.numpy as jnp
+    from repro.core import bitcells
+    stacked = bitcells.stack_bitcells()
+    ls = jnp.zeros(len(bitcells.MEM_TYPE_ORDER), jnp.int32)
+    return (stacked, ls), {}
+
+
+def _build_score_jit():
+    import jax.numpy as jnp
+    from repro.hetero.system import METRIC_COLS
+    cols = {k: jnp.linspace(1.0, 2.0, 8, dtype=jnp.float32)
+            for k in METRIC_COLS}
+    idx = jnp.zeros((4, 2), jnp.int32)
+    cap = jnp.full((2,), 1e6, jnp.float32)
+    f_req = jnp.full((2,), 1e8, jnp.float32)
+    return (idx, cols, cap, f_req), {}
+
+
+def _sim_inputs(J: int):
+    import jax.numpy as jnp
+    from repro.sim.engine import SIM_COLS
+    S, T = 2, 8
+    base = {"bits": 4096.0, "word_bits": 32.0, "e_read_j": 1e-12,
+            "e_write_j": 2e-12, "f_op_hz": 1e9, "p_leak_w": 1e-6,
+            "retention_s": 1e-3}
+    shape = (J, S) if J else (S,)
+    params = {c: jnp.full(shape, base[c], jnp.float32) for c in SIM_COLS}
+    params["tiles"] = jnp.ones(shape, jnp.float32)
+    params["interval_s"] = jnp.full(shape, 5e-4, jnp.float32)
+    slot = {"cap_bits": jnp.full((S,), 1e6, jnp.float32),
+            "lifetime_s": jnp.full((S,), 1e-2, jnp.float32)}
+    xs = (jnp.full((T,), 1e-5, jnp.float32),
+          jnp.ones((T, S), jnp.float32),
+          jnp.full((T, S), 64.0, jnp.float32),
+          jnp.full((T, S), 0.5, jnp.float32))
+    consts = jnp.asarray([1.0, 2.0], jnp.float32)
+    return (params, slot, xs, consts), {}
+
+
+@dataclasses.dataclass(frozen=True)
+class DtEntry:
+    name: str
+    rel: str           # repo-relative module path (finding anchor)
+    attr: str          # module attribute holding the jitted callable
+    build: Callable[[], Tuple[tuple, dict]]
+
+
+ENTRIES: Tuple[DtEntry, ...] = (
+    DtEntry("characterize_batch", "src/repro/core/characterize.py",
+            "characterize_batch", _build_characterize_batch),
+    DtEntry("characterize_corners_batch", "src/repro/core/characterize.py",
+            "characterize_corners_batch", _build_characterize_corners_batch),
+    DtEntry("retention_time_batch", "src/repro/core/retention.py",
+            "retention_time_batch", _build_retention_time_batch),
+    DtEntry("score_kernel", "src/repro/hetero/system.py",
+            "_score_jit", _build_score_jit),
+    DtEntry("sim_grid_xla", "src/repro/sim/engine.py",
+            "_sim_grid_xla", lambda: _sim_inputs(3)),
+    DtEntry("sim_phase_one", "src/repro/sim/engine.py",
+            "_sim_one_jit", lambda: _sim_inputs(0)),
+)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+
+
+def _sub_jaxprs(params: dict, closed_cls):
+    for v in params.values():
+        if isinstance(v, closed_cls):
+            yield v
+        elif isinstance(v, (list, tuple)):
+            for item in v:
+                if isinstance(item, closed_cls):
+                    yield item
+
+
+def _walk_eqns(closed_jaxpr):
+    # the ClosedJaxpr class is version-drifty to import; make_jaxpr just
+    # handed us an instance, so match sub-jaxprs against its own type
+    closed_cls = type(closed_jaxpr)
+    stack = [closed_jaxpr.jaxpr]
+    while stack:
+        jx = stack.pop()
+        for eqn in jx.eqns:
+            yield eqn
+            for sub in _sub_jaxprs(eqn.params, closed_cls):
+                stack.append(sub.jaxpr)
+
+
+def audit_callable(name: str, fn, args, kwargs=None) -> List[dict]:
+    """Trace ``fn`` and return raw DT issues ({rule, message}); shared by
+    the live checker and the analyzer's own test fixtures."""
+    import jax
+    issues: List[dict] = []
+    closed = jax.make_jaxpr(fn)(*args, **(kwargs or {}))
+
+    bad_dtypes: Dict[str, str] = {}
+    narrow: Dict[str, str] = {}
+    for eqn in _walk_eqns(closed):
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            dt = getattr(aval, "dtype", None)
+            if dt is None:
+                continue
+            if str(dt) not in ALLOWED_DTYPES:
+                bad_dtypes.setdefault(str(dt), eqn.primitive.name)
+            if eqn.primitive.name in _ACCUM_PRIMS and \
+                    str(dt) in _NARROW_INTS:
+                narrow.setdefault(str(dt), eqn.primitive.name)
+    for dt, prim in sorted(bad_dtypes.items()):
+        issues.append({"rule": "DT01", "message":
+                       f"{name}: primitive {prim!r} manufactures dtype "
+                       f"{dt} (policy: {sorted(ALLOWED_DTYPES)})"})
+    for dt, prim in sorted(narrow.items()):
+        issues.append({"rule": "DT03", "message":
+                       f"{name}: integer accumulation {prim!r} runs in "
+                       f"{dt} — overflow-prone; accumulate in int32+"})
+
+    weak = [i for i, aval in enumerate(closed.out_avals)
+            if getattr(aval, "weak_type", False)
+            and "float" in str(getattr(aval, "dtype", ""))]
+    if weak:
+        issues.append({"rule": "DT02", "message":
+                       f"{name}: output leaf/leaves {weak} are weak-typed "
+                       f"floats — a Python scalar reached the jit boundary"})
+    return issues
+
+
+# ---------------------------------------------------------------------------
+# checker entry
+# ---------------------------------------------------------------------------
+
+
+def _module_of(rel: str) -> str:
+    # src/repro/core/characterize.py -> repro.core.characterize
+    return rel[len("src/"):-len(".py")].replace("/", ".")
+
+
+def _anchor_line(project, rel: str, attr: str) -> int:
+    import ast
+    mod = project.module(rel)
+    if mod is None:
+        return 0
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == attr
+                for t in node.targets):
+            return node.lineno
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                node.name == attr:
+            return node.lineno
+    return 0
+
+
+def check(project) -> List[Finding]:
+    import importlib
+    findings: List[Finding] = []
+    for entry in ENTRIES:
+        line = _anchor_line(project, entry.rel, entry.attr)
+        mod = project.module(entry.rel)
+        snippet = mod.snippet(line) if (mod and line) else ""
+
+        def emit(rule, msg):
+            findings.append(Finding(rule=rule, path=entry.rel, line=line,
+                                    message=msg, snippet=snippet))
+
+        try:
+            fn = getattr(importlib.import_module(_module_of(entry.rel)),
+                         entry.attr)
+        except (ImportError, AttributeError) as e:
+            emit("DT04", f"{entry.name}: entry point no longer resolves "
+                         f"({type(e).__name__}: {e})")
+            continue
+        try:
+            args, kwargs = entry.build()
+        except Exception as e:
+            emit("DT04", f"{entry.name}: drive-input builder failed "
+                         f"({type(e).__name__}: {e})")
+            continue
+        try:
+            issues = audit_callable(entry.name, fn, args, kwargs)
+        except Exception as e:
+            emit("DT04", f"{entry.name}: tracing failed "
+                         f"({type(e).__name__}: {e})")
+            continue
+        for issue in issues:
+            emit(issue["rule"], issue["message"])
+    return findings

@@ -39,6 +39,7 @@ physics and composition machinery under them):
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import hashlib
@@ -203,13 +204,16 @@ class DesignTable:
         the nominal-only path is byte-identical to the pre-corner one)."""
         global _vmap_characterize_calls
         import jax.numpy as jnp
+
+        from repro.analysis import sanitize
         ops = corners_mod.as_corners(corners)
         vecs = jnp.stack([c.to_vector() for c in configs])
         if ops == (corners_mod.NOMINAL,):
-            out = chz.characterize_batch(vecs)
+            out = sanitize.maybe_wrap(chz.characterize_batch)(vecs)
             metrics = {k: np.asarray(v) for k, v in out.items()}
         else:
-            out = chz.characterize_corners(vecs, ops)
+            out = sanitize.maybe_wrap(
+                lambda v: chz.characterize_corners(v, ops))(vecs)
             metrics = {}
             for k, v in out.items():
                 grid = np.asarray(v)                    # (N, C)
@@ -581,16 +585,30 @@ class Compiler:
 
     ``tech`` names the device/bitcell library (one 22nm-class stack ships
     with the repo); ``mem_types`` is the default bitcell menu for
-    ``design_space``/``table``/``explore``.
+    ``design_space``/``table``/``explore``; ``sanitize=True`` runs every
+    characterization/composition/simulation this instance launches under
+    the checkify runtime sanitizer (nan + index checks, see
+    ``repro.analysis.sanitize``) — numerically identical outputs, raises on
+    the first NaN/Inf or out-of-bounds gather instead of propagating it.
     """
     tech: str = "gf22"
     mem_types: Tuple[str, ...] = DEFAULT_MEM_TYPES
+    sanitize: bool = False
 
     def __post_init__(self):
         unknown = [m for m in self.mem_types if m not in bitcells.BITCELLS]
         if unknown:
             raise KeyError(f"unknown mem_types {unknown}; available: "
                            f"{sorted(bitcells.BITCELLS)}")
+
+    def _sanitize_scope(self):
+        """Force-enable the sanitizer for calls made by this instance;
+        a plain Compiler() leaves the ambient REPRO_SANITIZE setting in
+        charge instead of force-disabling it."""
+        if not self.sanitize:
+            return contextlib.nullcontext()
+        from repro.analysis import sanitize as sanitize_mod
+        return sanitize_mod.enabled_scope(True)
 
     # ------------------------------------------------------------- compile
     def compile(self, config: Optional[MacroConfig] = None,
@@ -606,8 +624,9 @@ class Compiler:
             config = dataclasses.replace(config, **overrides)
         if config.mem_type not in bitcells.BITCELLS:
             raise KeyError(f"unknown mem_type {config.mem_type!r}")
-        return Macro(config=config, ppa=chz.characterize_config(config,
-                                                                tp=op))
+        with self._sanitize_scope():
+            return Macro(config=config, ppa=chz.characterize_config(config,
+                                                                    tp=op))
 
     # ----------------------------------------------------------- exploration
     def design_space(self, **kw) -> List[MacroConfig]:
@@ -619,7 +638,8 @@ class Compiler:
               corners=None) -> DesignTable:
         if space is None:
             space = self.design_space()
-        return DesignTable.build(space, cache=cache, corners=corners)
+        with self._sanitize_scope():
+            return DesignTable.build(space, cache=cache, corners=corners)
 
     def explore(self, tasks=None, space: SpaceLike = None,
                 policy: Optional[SelectionPolicy] = None,
@@ -633,8 +653,9 @@ class Compiler:
         """
         if space is None:
             space = self.design_space()
-        return explore(space=space, tasks=tasks, policy=policy, cache=cache,
-                       corners=corners, robust=robust)
+        with self._sanitize_scope():
+            return explore(space=space, tasks=tasks, policy=policy,
+                           cache=cache, corners=corners, robust=robust)
 
     def compose(self, task, space: SpaceLike = None,
                 policy: Optional[SelectionPolicy] = None,
@@ -665,10 +686,12 @@ class Compiler:
         """
         if space is None:
             space = self.design_space()
-        return compose(space=space, task=task, policy=policy,
-                       compose_policy=compose_policy, cache=cache,
-                       sharded=sharded, refine=refine, sim_policy=sim_policy,
-                       corners=corners, robust=robust)
+        with self._sanitize_scope():
+            return compose(space=space, task=task, policy=policy,
+                           compose_policy=compose_policy, cache=cache,
+                           sharded=sharded, refine=refine,
+                           sim_policy=sim_policy, corners=corners,
+                           robust=robust)
 
     def simulate(self, task, space: SpaceLike = None,
                  policy: Optional[SelectionPolicy] = None,

@@ -204,5 +204,7 @@ def characterize_config(cfg: macro.MacroConfig, tp=None):
 
     ``tp``: operating corner (TechParams / OperatingPoint / name; None =
     nominal)."""
-    out = _characterize_jit(corners.resolve(tp))(cfg.to_vector())
+    from repro.analysis import sanitize
+    fn = sanitize.maybe_wrap(_characterize_jit(corners.resolve(tp)))
+    out = fn(cfg.to_vector())
     return {k: float(v) for k, v in out.items()}

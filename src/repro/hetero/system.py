@@ -127,10 +127,15 @@ def score_grid(metrics: Mapping[str, np.ndarray], idx: np.ndarray,
     idx_dev = jnp.asarray(np.asarray(idx), jnp.int32)
     slot_cap_bits = jnp.asarray(np.asarray(cap_bits), jnp.float32)
     slot_f_req_hz = jnp.asarray(np.asarray(f_req), jnp.float32)
+    from repro.analysis import sanitize
     if sharded:
+        # shard_map composes badly with checkify's error plumbing; the
+        # sanitizer covers the single-device path, which computes the same
+        # values
         out = shard_leading(_score_jit, idx_dev, cols, slot_cap_bits,
                             slot_f_req_hz, devices=devices)
     else:
-        out = _score_jit(idx_dev, cols, slot_cap_bits, slot_f_req_hz)
+        out = sanitize.maybe_wrap(_score_jit)(
+            idx_dev, cols, slot_cap_bits, slot_f_req_hz)
     _eval_calls += 1
     return {k: np.asarray(v) for k, v in out.items()}

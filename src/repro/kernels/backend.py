@@ -76,6 +76,14 @@ def available_backends(name: str) -> Tuple[str, ...]:
     return tuple(b for b in BACKENDS if b in impls)
 
 
+def impl_map(name: str) -> Dict[str, Callable]:
+    """Copy of one op's backend->implementation mapping. Introspection hook
+    for the semantic analyzer (PB profiles every op with a 'tpu' impl) and
+    the backend-divergence test sweep; mutating the copy does not touch the
+    registry."""
+    return dict(_REGISTRY.get(name, {}))
+
+
 def resolve_backend(explicit: Optional[str] = None) -> str:
     if explicit is not None:
         if explicit not in BACKENDS:

@@ -260,7 +260,8 @@ def simulate_traces(cols: Mapping[str, np.ndarray], idx: np.ndarray,
             "lifetime_s": jnp.asarray(t0.lifetime_s, jnp.float32)}
     consts = jnp.asarray([1.0 if policy.refresh else 0.0,
                           policy.rewrite_overhead], jnp.float32)
-    impl = _backend.get_impl("sim_replay", backend)
+    from repro.analysis import sanitize
+    impl = sanitize.maybe_wrap(_backend.get_impl("sim_replay", backend))
 
     per_phase: Dict[str, Dict[str, np.ndarray]] = {}
     bad = np.any(idx < 0, axis=1)

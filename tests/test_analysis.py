@@ -10,7 +10,11 @@ The two regression guards the issue names explicitly:
 * deleting the ``corners_fingerprint`` ingredient from ``api.grid_hash``
   must surface as CK02 + CK03 (the stated acceptance criterion).
 
-No jax import anywhere here — the analyzer is stdlib-only by design.
+The AST tier stays stdlib-only by design, so none of its tests import jax.
+The semantic tier (PB/DT/RC, the final section of this file) is the
+exception: those checkers trace jaxprs and execute jit sites, so their
+tests import jax *inside the test bodies* — collecting this module still
+works in a jax-free environment as long as only AST-tier tests run.
 """
 import json
 import textwrap
@@ -452,3 +456,272 @@ def test_live_repo_clean_against_committed_baseline():
     assert report.findings == [], report.format_text()
     assert report.exit_code == 0
     assert report.stale_baseline == []
+
+
+# --------------------------------------------------------- prune-baseline
+def test_cli_prune_baseline_drops_only_families_that_ran(tmp_path, capsys):
+    root = _write_tree(tmp_path, {"src/repro/core/periphery.py": """
+        def stage(width):
+            return width
+        """})
+    # a baseline with one stale US entry and one PB entry the US-only run
+    # never re-checks
+    baseline = root / "analysis_baseline.json"
+    baseline.write_text(json.dumps({"entries": [
+        {"rule": "US01", "path": "src/repro/core/periphery.py",
+         "snippet": "gone = 1", "justification": "stale"},
+        {"rule": "PB01", "path": "src/repro/kernels/x.py",
+         "snippet": "whatever", "justification": "not re-checked"},
+    ]}), encoding="utf-8")
+    assert main(["--root", str(root), "--rules", "US",
+                 "--prune-baseline"]) == 0
+    out = capsys.readouterr().out
+    assert "pruned 1 stale" in out
+    kept = json.loads(baseline.read_text())["entries"]
+    # the US entry is gone, the PB entry survived (its family never ran)
+    assert [e["rule"] for e in kept] == ["PB01"]
+
+
+def test_prune_baseline_keeps_matching_entries(tmp_path, capsys):
+    root = _write_tree(tmp_path, {"src/repro/core/periphery.py": """
+        def stage(width):
+            area = width * width
+            return area
+        """})
+    assert main(["--root", str(root), "--rules", "US",
+                 "--write-baseline"]) == 0
+    capsys.readouterr()
+    assert main(["--root", str(root), "--rules", "US",
+                 "--prune-baseline"]) == 0
+    assert "pruned 0 stale" in capsys.readouterr().out
+    entries = json.loads(
+        (root / "analysis_baseline.json").read_text())["entries"]
+    assert entries, "live-matching entries must survive a prune"
+    assert main(["--root", str(root), "--rules", "US"]) == 0
+
+
+# --------------------------------------------------- semantic tier: PB
+# These tests import jax (inside the bodies); see the module docstring.
+
+def test_pb_live_kernels_prove_clean_on_all_profiles():
+    """The tentpole acceptance: every tpu-registered op proves PB01-PB04 on
+    at least 3 representative config shapes, zero findings."""
+    from repro.analysis.semantic import pb
+    findings, stats = pb.verify_all(Project(ROOT))
+    assert findings == [], [f.format() for f in findings]
+    assert set(stats) == {"attention", "ssm_scan", "retention"}
+    for op, clean in stats.items():
+        assert clean >= 3, f"{op}: only {clean} profiles proved clean"
+
+
+def test_pb03_injected_output_race_caught():
+    """Collapsing ssm_scan's output d-index onto block 0 makes every
+    parallel d-step write the same block: PB03 (+PB02, the other blocks are
+    never written)."""
+    from repro.analysis.semantic import pb
+    project = _overlay(
+        "src/repro/kernels/ssm_scan.py",
+        "out_specs=pl.BlockSpec((1, chunk, block_d), "
+        "lambda b, d, c: (b, c, d)),",
+        "out_specs=pl.BlockSpec((1, chunk, block_d), "
+        "lambda b, d, c: (b, c, 0)),")
+    rules = {f.rule for f in pb.check(project)}
+    assert "PB03" in rules and "PB02" in rules, rules
+
+
+def test_pb01_injected_out_of_bounds_caught():
+    """Shifting flash attention's q index by one block walks off the end of
+    the operand on the last grid row: PB01."""
+    from repro.analysis.semantic import pb
+    project = _overlay(
+        "src/repro/kernels/flash_attention.py",
+        "in_specs=[\n"
+        "            pl.BlockSpec((1, block_q, D), "
+        "lambda b, i, j: (b, i, 0)),",
+        "in_specs=[\n"
+        "            pl.BlockSpec((1, block_q, D), "
+        "lambda b, i, j: (b, i + 1, 0)),")
+    rules = {f.rule for f in pb.check(project)}
+    assert "PB01" in rules, rules
+
+
+def test_pb04_injected_axis_order_swap_caught():
+    """Un-permuting ssm_scan's output map to (b, d, c) sends the d axis
+    (many blocks) through the chunk dimension (few blocks): PB04."""
+    from repro.analysis.semantic import pb
+    project = _overlay(
+        "src/repro/kernels/ssm_scan.py",
+        "out_specs=pl.BlockSpec((1, chunk, block_d), "
+        "lambda b, d, c: (b, c, d)),",
+        "out_specs=pl.BlockSpec((1, chunk, block_d), "
+        "lambda b, d, c: (b, d, c)),")
+    rules = {f.rule for f in pb.check(project)}
+    assert "PB04" in rules, rules
+
+
+def test_pb_ssm_grid_ordering_is_intentional_and_locked():
+    """ssm_scan's grid is (b, d, c) while its x/y index maps emit
+    (b, c, d) — verify on a live capture that this permutation is the
+    consistent identity {b->0, d->2, c->1}, so a future 'simplification'
+    back to (b, d, c) trips PB04/PB01 instead of silently corrupting."""
+    import jax.numpy as jnp
+    from repro.analysis.semantic import capture, pb
+    from repro.kernels.ssm_scan import ssm_scan_pallas
+    B, S, di, n = 2, 128, 256, 8
+    x = jnp.zeros((B, S, di), jnp.float32)
+    bc = jnp.zeros((B, S, n), jnp.float32)
+    with capture.intercept_pallas(ROOT) as caps:
+        ssm_scan_pallas(x, x, jnp.zeros((di, n)), bc, bc, jnp.zeros((di,)),
+                        block_d=128, chunk=64)
+    (cap,) = caps
+    assert cap.grid == (B, di // 128, S // 64)
+    assert pb.identity_map(cap.out_specs.index_map, cap.grid) == \
+        {0: 0, 1: 2, 2: 1}
+    assert cap.dimension_semantics == ("parallel", "parallel", "arbitrary")
+    assert pb.verify_capture(cap) == []
+
+
+def test_pb05_unprofiled_tpu_op_caught(monkeypatch):
+    from repro.analysis.semantic import pb
+    monkeypatch.setattr(
+        pb, "KERNEL_SPECS",
+        {k: v for k, v in pb.KERNEL_SPECS.items() if k != "attention"})
+    findings, stats = pb.verify_all(Project(ROOT))
+    assert any(f.rule == "PB05" and "attention" in f.message
+               for f in findings)
+    assert "attention" not in stats
+
+
+# --------------------------------------------------- semantic tier: DT
+def test_dt_live_entry_points_clean():
+    from repro.analysis.semantic import dt
+    findings = dt.check(Project(ROOT))
+    assert findings == [], [f.format() for f in findings]
+
+
+def test_dt01_flags_off_policy_dtype():
+    import jax.numpy as jnp
+    from repro.analysis.semantic import dt
+    issues = dt.audit_callable(
+        "fixture", lambda x: jnp.sum(x.astype(jnp.float16)),
+        (jnp.ones((4,), jnp.float32),))
+    assert [i["rule"] for i in issues] == ["DT01"]
+    assert "float16" in issues[0]["message"]
+
+
+def test_dt02_flags_weak_typed_output():
+    import jax.numpy as jnp
+    from repro.analysis.semantic import dt
+    issues = dt.audit_callable(
+        "fixture", lambda x: x * 2.0 + 0.0, (3.0,))
+    assert any(i["rule"] == "DT02" for i in issues)
+    # anchoring the dtype kills the weak type: clean
+    fixed = dt.audit_callable(
+        "fixture", lambda x: jnp.float32(x) * 2.0,
+        (jnp.float32(3.0),))
+    assert fixed == []
+
+
+def test_dt03_flags_narrow_int_accumulation():
+    import jax.numpy as jnp
+    from repro.analysis.semantic import dt
+    issues = dt.audit_callable(
+        "fixture", lambda x: jnp.cumsum(x), (jnp.ones((8,), jnp.int16),))
+    assert any(i["rule"] == "DT03" for i in issues)
+
+
+def test_dt04_spec_rot_on_missing_attr(monkeypatch):
+    from repro.analysis.semantic import dt
+    rotted = dt.DtEntry("ghost", "src/repro/core/characterize.py",
+                        "no_such_attr", lambda: ((), {}))
+    monkeypatch.setattr(dt, "ENTRIES", (rotted,))
+    findings = dt.check(Project(ROOT))
+    assert [f.rule for f in findings] == ["DT04"]
+    assert "ghost" in findings[0].message
+
+
+# --------------------------------------------------- semantic tier: RC
+def test_rc_budgets_hold_and_repeat_drives_hit_cache():
+    """Every budgeted site compiles within budget and a second identical
+    drive adds nothing (the deltas measure OUR drives, so this is stable in
+    a shared pytest process)."""
+    from repro.analysis.semantic import rc
+    deltas, broken, errors = rc.audit_sites()
+    assert broken == [] and errors == []
+    assert set(deltas) == {s.name for s in rc.SITES}
+    for site in rc.SITES:
+        d1, d2 = deltas[site.name]
+        assert d1 <= site.budget, (site.name, d1, site.budget)
+        assert d2 == 0, (site.name, d2)
+
+
+def test_rc01_rc02_fire_on_synthetic_cache_leak(monkeypatch):
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis.semantic import rc
+
+    leaky = jax.jit(lambda x, n: x * n, static_argnums=(1,))
+    calls = {"n": 0}
+
+    def drive():
+        # a fresh static arg every call: grows the cache on EVERY drive,
+        # which is both over-budget (RC01) and repeat-unstable (RC02)
+        for _ in range(2):
+            calls["n"] += 1
+            leaky(jnp.ones(3), calls["n"])
+
+    site = rc.RcSite("leaky", "src/repro/core/characterize.py",
+                     "characterize_batch", 1)
+    monkeypatch.setattr(rc, "_resolve", lambda s: leaky)
+    deltas, broken, errors = rc.audit_sites(sites=(site,), drivers=(drive,))
+    assert broken == [] and errors == []
+    d1, d2 = deltas["leaky"]
+    assert d1 > site.budget      # RC01 condition
+    assert d2 > 0                # RC02 condition
+    monkeypatch.setattr(rc, "SITES", (site,))
+    monkeypatch.setattr(rc, "DRIVERS", (drive,))
+    monkeypatch.setattr(rc, "audit_sites",
+                        lambda: ({"leaky": (d1, d2)}, [], []))
+    rules = [f.rule for f in rc.check(Project(ROOT))
+             if f.rule in ("RC01", "RC02")]
+    assert rules == ["RC01", "RC02"]
+
+
+def test_rc03_overlay_jit_site_without_budget_caught(monkeypatch):
+    from repro.analysis.semantic import rc
+    project = Project(ROOT, overlay={
+        "src/repro/core/_rc_probe.py":
+            "import jax\n\nprobe = jax.jit(lambda x: x)\n"})
+    sites = rc._jit_sites_in_tree(project)
+    assert ("src/repro/core/_rc_probe.py", "probe", 3) in sites
+    # through the checker (drives stubbed out: RC03 is pure AST)
+    monkeypatch.setattr(rc, "audit_sites", lambda: ({}, [], []))
+    findings = [f for f in rc.check(project) if f.rule == "RC03"]
+    assert len(findings) == 1
+    assert findings[0].path == "src/repro/core/_rc_probe.py"
+    assert "probe" in findings[0].message
+
+
+def test_rc04_spec_rot_on_missing_attr(monkeypatch):
+    from repro.analysis.semantic import rc
+    ghost = rc.RcSite("ghost", "src/repro/core/characterize.py",
+                      "no_such_attr", 1)
+    monkeypatch.setattr(rc, "SITES", (ghost,))
+    monkeypatch.setattr(rc, "DRIVERS", ())
+    findings = [f for f in rc.check(Project(ROOT)) if f.rule == "RC04"]
+    assert len(findings) == 1 and "ghost" in findings[0].message
+
+
+# ------------------------------------------- semantic tier: runner/CLI
+def test_runner_semantic_families_lazy_and_reported():
+    from repro.analysis.runner import SEMANTIC_FAMILIES
+    assert SEMANTIC_FAMILIES == ("PB", "DT", "RC")
+    # AST-only runs never touch (or report) the semantic families
+    report = run_analysis(ROOT, checks=("US",))
+    assert report.families_run == ("US",)
+
+
+def test_exit_bits_cover_semantic_families():
+    assert EXIT_BITS["PB"] == 32
+    assert EXIT_BITS["DT"] == 64
+    assert EXIT_BITS["RC"] == 128

@@ -1,0 +1,104 @@
+"""The runtime sanitizer shim: switch precedence, checkify wrapping, and the
+wired entry points (characterize / score / sim) running clean under it with
+bit-identical outputs."""
+import numpy as np
+import pytest
+
+from repro.analysis import sanitize
+
+
+def test_disabled_by_default_returns_fn_unchanged():
+    def f(x):
+        return x
+    assert sanitize.maybe_wrap(f) is f
+    assert not sanitize.enabled()
+
+
+def test_switch_precedence(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not sanitize.enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize.enabled()
+    with sanitize.enabled_scope(False):        # scope beats env
+        assert not sanitize.enabled()
+        with sanitize.enabled_scope(True):     # innermost wins
+            assert sanitize.enabled()
+            assert not sanitize.enabled(explicit=False)  # explicit beats all
+        assert not sanitize.enabled()
+    assert sanitize.enabled()
+
+
+def test_wrap_catches_nan_and_oob_index():
+    import jax.numpy as jnp
+    f = sanitize.wrap(lambda x: jnp.log(x))
+    with pytest.raises(Exception, match="nan"):
+        f(jnp.asarray([-1.0], jnp.float32))
+    g = sanitize.wrap(lambda x, i: x[i])
+    with pytest.raises(Exception, match="out-of-bounds|index"):
+        g(jnp.arange(4.0), jnp.asarray(9, jnp.int32))
+
+
+def test_wrap_preserves_values():
+    import jax.numpy as jnp
+    def f(x):
+        return {"y": jnp.sqrt(x), "z": x * 2}
+    x = jnp.asarray([1.0, 4.0], jnp.float32)
+    plain, wrapped = f(x), sanitize.wrap(f)(x)
+    for k in plain:
+        np.testing.assert_array_equal(np.asarray(plain[k]),
+                                      np.asarray(wrapped[k]))
+
+
+def test_compiler_sanitize_flag_scopes_characterization():
+    from repro.api import Compiler
+    clean = Compiler().compile(mem_type="gc_sisi", word_size=32,
+                               num_words=64)
+    checked = Compiler(sanitize=True).compile(mem_type="gc_sisi",
+                                              word_size=32, num_words=64)
+    assert clean.ppa == checked.ppa     # bit-identical floats
+
+
+def test_wired_entry_points_run_clean_under_env(monkeypatch):
+    """characterize (incl. the SRAM masked-lane path), score_grid and both
+    sim backends all pass nan+index checks on real inputs."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    from repro.api import DesignTable, design_space
+    from repro.hetero import system
+    from repro.sim import engine
+    from repro.sim.trace import Trace
+
+    table = DesignTable.from_configs(
+        design_space(word_sizes=(16,), num_words=(16, 32)))
+    assert len(table) == 10
+
+    vals = {"area_um2": 100.0, "bits": 1024.0, "p_leak_w": 1e-6,
+            "p_refresh_w": 1e-7, "e_read_j": 1e-12, "f_op_hz": 1e9}
+    metrics = {k: np.full(8, v, np.float32) for k, v in vals.items()}
+    out = system.score_grid(metrics, np.zeros((4, 2), np.int64),
+                            [1e6, 1e6], [1e8, 1e8])
+    assert np.isfinite(out["area_um2"]).all()
+
+    S, T = 2, 8
+    trace = Trace(phase="prefill", t_bin_s=np.full(T, 1e-5),
+                  reads=np.ones((S, T)), write_bits=np.full((S, T), 64.0),
+                  occupancy=np.full((S, T), 0.5),
+                  cap_bits=np.full(S, 1e6), f_req_hz=np.full(S, 1e8),
+                  lifetime_s=np.full(S, 1e-2))
+    sim_vals = {"bits": 4096.0, "word_bits": 32.0, "e_read_j": 1e-12,
+                "e_write_j": 2e-12, "f_op_hz": 1e9, "p_leak_w": 1e-6,
+                "retention_s": 1e-3}
+    cols = {k: np.full(4, v, np.float32) for k, v in sim_vals.items()}
+    for backend in ("xla", "interpret"):
+        res = engine.simulate_traces(cols, np.zeros((3, 2), np.int64),
+                                     [trace], backend=backend)
+        assert np.isfinite(res["e_total_j"]).all()
+
+
+def test_sanitized_table_matches_unsanitized_bitexact():
+    from repro.api import DesignTable, design_space
+    space = design_space(word_sizes=(32,), num_words=(64,))
+    base = DesignTable.from_configs(space)
+    with sanitize.enabled_scope(True):
+        checked = DesignTable.from_configs(space)
+    for k in base.metric_names:
+        np.testing.assert_array_equal(base[k], checked[k], err_msg=k)
