@@ -71,6 +71,26 @@ def main() -> None:
     print(f"hetero_compose,{us:.0f},\"joint (L1,L2) composition for 7 tasks; "
           f"Table 2 matches {n_match}/7\"")
 
+    # N-level branch-and-bound vs exhaustive (full record:
+    # python -m benchmarks.hetero_nlevel)
+    from repro.core.gainsight import nlevel_task
+    from repro.hetero import ComposePolicy
+
+    def nlevel_bb():
+        kw = dict(objective="power", candidate_mode="all_feasible",
+                  max_candidates_per_bucket=16)
+        ex = compose(table, nlevel_task(4), compose_policy=ComposePolicy(
+            search="exhaustive", max_compositions=50_000, **kw))
+        bb = compose(table, nlevel_task(4), compose_policy=ComposePolicy(
+            search="branch_and_bound", **kw))
+        same = bb.labels() == ex.labels()
+        return (ex, bb), (ex.n_compositions, bb.n_compositions, same)
+
+    (_, (n_ex, n_bb, same)), us = _timed(nlevel_bb)
+    print(f"hetero_nlevel,{us:.0f},\"4-level B&B scored {n_bb} vs "
+          f"{n_ex} exhaustive ({n_ex / max(n_bb, 1):.0f}x pruning); "
+          f"identical best: {same}\"")
+
     # trace replay + simulated re-rank (full record: python -m benchmarks.sim_replay)
     (_, n_sim_match), us = _timed(lambda: compose_all(refine="simulate"))
     print(f"sim_replay,{us:.0f},\"simulate-then-rerank for 7 tasks "

@@ -24,10 +24,19 @@ REPO = Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(REPO / "src"))
 
 GOLDEN_PATH = REPO / "tests" / "golden" / "table2.json"
+NLEVEL_PATH = REPO / "tests" / "golden" / "table2_nlevel.json"
 
 # the frozen slice: small but covers every mem type, LS on/off, and both a
 # shallow and a deep array (delay-chain quantization edge)
 SLICE_KW = dict(word_sizes=(16, 64), num_words=(32, 256))
+
+# the frozen N-level reference: 3 levels of gainsight.NLEVEL_REFERENCE,
+# composed under each of these (name -> ComposePolicy kwargs) settings
+NLEVEL_POLICIES = {
+    "preference": dict(),
+    "power_bb": dict(objective="power", candidate_mode="all_feasible",
+                     search="branch_and_bound"),
+}
 
 
 def build_snapshot() -> dict:
@@ -57,6 +66,42 @@ def build_snapshot() -> dict:
     }
 
 
+def compose_nlevel(policy_kw: dict):
+    """One 3-level reference composition (shared with the golden test so the
+    live recomputation and the snapshot can never use different settings)."""
+    from repro.core.gainsight import nlevel_task
+    from repro.hetero import ComposePolicy, compose
+    return compose(None, nlevel_task(3),
+                   compose_policy=ComposePolicy(**policy_kw))
+
+
+def build_nlevel_snapshot() -> dict:
+    import jax
+
+    compositions = {}
+    for name, kw in NLEVEL_POLICIES.items():
+        rep = compose_nlevel(kw)
+        best = rep.best
+        compositions[name] = {
+            "labels": best.labels(),
+            "picks": {lvl: [p.config_idx for p in lc.picks]
+                      for lvl, lc in best.levels.items()},
+            "tiles": {lvl: list(lc.tiles)
+                      for lvl, lc in best.levels.items()},
+            # exact float64 repr of the float32 the scoring kernel produced
+            "metrics": {k: float(v) for k, v in best.metrics.items()},
+            "search": rep.search,
+            "n_space": rep.n_space,
+        }
+    return {
+        "comment": "golden N-level composition snapshot - regenerate ONLY "
+                   "via scripts/update_golden.py or pytest --update-golden",
+        "jax_version": jax.__version__,
+        "task": "nlevel3",
+        "compositions": compositions,
+    }
+
+
 def write_snapshot(path: Path = GOLDEN_PATH) -> Path:
     snap = build_snapshot()
     path.parent.mkdir(parents=True, exist_ok=True)
@@ -64,6 +109,13 @@ def write_snapshot(path: Path = GOLDEN_PATH) -> Path:
     return path
 
 
+def write_nlevel_snapshot(path: Path = NLEVEL_PATH) -> Path:
+    snap = build_nlevel_snapshot()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(snap, indent=1, sort_keys=True) + "\n")
+    return path
+
+
 if __name__ == "__main__":
-    p = write_snapshot()
-    print(f"wrote {p}")
+    for p in (write_snapshot(), write_nlevel_snapshot()):
+        print(f"wrote {p}")

@@ -75,6 +75,17 @@ def _build_score_jit():
     return (idx, cols, cap, f_req), {}
 
 
+def _build_score_corners_jit():
+    import jax.numpy as jnp
+    from repro.hetero.system import METRIC_COLS
+    cols = {k: jnp.linspace(1.0, 2.0, 16, dtype=jnp.float32).reshape(2, 8)
+            for k in METRIC_COLS}
+    idx = jnp.zeros((4, 2), jnp.int32)
+    cap = jnp.full((2,), 1e6, jnp.float32)
+    f_req = jnp.full((2,), 1e8, jnp.float32)
+    return (idx, cols, cap, f_req), {}
+
+
 def _sim_inputs(J: int):
     import jax.numpy as jnp
     from repro.sim.engine import SIM_COLS
@@ -113,6 +124,8 @@ ENTRIES: Tuple[DtEntry, ...] = (
             "retention_time_batch", _build_retention_time_batch),
     DtEntry("score_kernel", "src/repro/hetero/system.py",
             "_score_jit", _build_score_jit),
+    DtEntry("score_kernel_corners", "src/repro/hetero/system.py",
+            "_score_corners_jit", _build_score_corners_jit),
     DtEntry("sim_grid_xla", "src/repro/sim/engine.py",
             "_sim_grid_xla", lambda: _sim_inputs(3)),
     DtEntry("sim_phase_one", "src/repro/sim/engine.py",

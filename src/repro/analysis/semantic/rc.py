@@ -71,6 +71,10 @@ def _drive_score() -> None:
     for J in (4, 6):
         system.score_grid(metrics, np.zeros((J, 2), np.int64),
                           [1e6, 1e6], [1e8, 1e8])
+    for C, J in ((2, 4), (3, 6)):
+        system.score_grid_corners([metrics] * C,
+                                  np.zeros((J, 2), np.int64),
+                                  [1e6, 1e6], [1e8, 1e8])
 
 
 def _sim_trace(T: int):
@@ -129,6 +133,9 @@ SITES: Tuple[RcSite, ...] = (
            "retention_time_batch", 2),
     # two composition-grid heights
     RcSite("score_kernel", "src/repro/hetero/system.py", "_score_jit", 2),
+    # two (corner-count x grid-height) profiles on the corner-vmapped path
+    RcSite("score_kernel_corners", "src/repro/hetero/system.py",
+           "_score_corners_jit", 2),
     # two trace bin counts on the vmapped grid path
     RcSite("sim_grid_xla", "src/repro/sim/engine.py", "_sim_grid_xla", 2),
     # the interpret oracle replays J compositions of identical shape: one

@@ -662,15 +662,20 @@ class Compiler:
                 compose_policy=None, cache: Union[None, str, Path] = None,
                 sharded: bool = False, refine: Optional[str] = None,
                 sim_policy=None, corners=None,
-                robust: Optional[str] = None):
+                robust: Optional[str] = None, levels=None):
         """Joint heterogeneous composition for one task -> CompositionReport.
 
         Where ``explore`` picks each cache level independently, ``compose``
-        scores every joint (L1 tech, L2 tech) system design — system area
-        [µm²], total power incl. refresh [W], bandwidth margin, capacity fit
-        — in one batched jnp evaluation and ranks them under an explicit
-        ``repro.hetero.ComposePolicy``. The default policy reproduces the
-        paper's Table-2 selections through the joint path.
+        scores joint N-level system designs — one technology pick per
+        (level, bucket) slot across every level the task declares — pricing
+        system area [µm²], total power incl. refresh [W], bandwidth margin,
+        and capacity fit in batched jnp evaluations, ranked under an
+        explicit ``repro.hetero.ComposePolicy``. The default policy
+        reproduces the paper's Table-2 selections through the joint path;
+        chip-level envelopes go in ``ComposePolicy.budget`` (a
+        ``repro.hetero.SystemBudget``), and spaces past
+        ``ComposePolicy.search_threshold`` are searched by lossless
+        branch-and-bound instead of exhaustive enumeration.
 
         ``task``    anything ``as_task_req`` understands (a
                     ``gainsight.Task``, a profiler ``TaskReq``, a mapping).
@@ -683,6 +688,8 @@ class Compiler:
         ``corners`` operating points to characterize at (None = nominal).
         ``robust``  ``"worst_case"`` prices candidates/feasibility on the
                     per-row worst corner (see ``DesignTable.worst_case_metrics``).
+        ``levels``  optional level-name subset, e.g. ``levels=("L1", "L2")``
+                    composes just those two levels of a deeper task.
         """
         if space is None:
             space = self.design_space()
@@ -691,7 +698,7 @@ class Compiler:
                            compose_policy=compose_policy, cache=cache,
                            sharded=sharded, refine=refine,
                            sim_policy=sim_policy, corners=corners,
-                           robust=robust)
+                           robust=robust, levels=levels)
 
     def simulate(self, task, space: SpaceLike = None,
                  policy: Optional[SelectionPolicy] = None,

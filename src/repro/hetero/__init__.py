@@ -1,36 +1,45 @@
-"""Heterogeneous composition engine: joint (L1, L2) memory-system design.
+"""Heterogeneous composition engine: joint N-level memory-system design.
 
 Where ``repro.api.explore`` picks each cache level independently (the paper's
 §5.4 greedy policy), this subsystem scores **whole system compositions** —
-the cross-product of candidate technologies per (level, bucket) slot — in one
-batched jnp evaluation: system area [µm²], total power including refresh [W],
-bandwidth margin, and capacity fit are computed per composition, optionally
-sharded across devices for large grids, and ranked under an explicit
-``ComposePolicy``. The default objective reproduces the paper's Table 2
-selections *through the joint path* (see ``tests/test_hetero.py``); budgeted
-or power-/area-minimizing objectives let the joint evaluation make tradeoffs
-the per-level greedy cannot.
+the N-level grid of candidate technologies per (level, bucket) slot, for
+every level a task declares or the ``levels=`` subset — in batched jnp
+evaluations: system area [µm²], total power including refresh [W], bandwidth
+margin, and capacity fit are computed per composition, optionally sharded
+across devices for large grids, and ranked under an explicit
+``ComposePolicy``. Chip-level envelopes arrive as a ``SystemBudget`` applied
+to whole compositions; spaces too large to enumerate are searched by the
+provably-lossless branch-and-bound in ``repro.hetero.search``. The default
+objective reproduces the paper's Table 2 selections *through the joint path*
+(see ``tests/test_hetero.py``); budgeted or power-/area-minimizing
+objectives let the joint evaluation make tradeoffs the per-level greedy
+cannot.
 
 Entry points::
 
     from repro.api import Compiler
     report = Compiler().compose(task)          # -> CompositionReport
+    report = Compiler().compose(task, levels=("L1", "L2"))
 
-    from repro.hetero import compose, ComposePolicy
+    from repro.hetero import compose, ComposePolicy, SystemBudget
     report = compose(table, task, compose_policy=ComposePolicy(
-        objective="power", area_budget_um2=2.5e6))
+        objective="power", budget=SystemBudget(area_um2=2.5e6)))
 """
 from repro.hetero.candidates import (BucketCandidates, Candidate,
                                      bucket_candidates, level_candidates)
 from repro.hetero.compose import (ComposePolicy, Composition,
                                   CompositionReport, LevelComposition,
                                   compose)
-from repro.hetero.system import (SYSTEM_METRICS, composition_eval_count,
-                                 score_grid)
+from repro.hetero.search import balanced_norms, branch_and_bound
+from repro.hetero.system import (SYSTEM_METRICS, SystemBudget,
+                                 composition_eval_count, score_grid,
+                                 score_grid_corners)
 
 __all__ = [
     "Candidate", "BucketCandidates", "bucket_candidates", "level_candidates",
     "ComposePolicy", "Composition", "LevelComposition", "CompositionReport",
     "compose",
-    "SYSTEM_METRICS", "score_grid", "composition_eval_count",
+    "balanced_norms", "branch_and_bound",
+    "SYSTEM_METRICS", "SystemBudget", "score_grid", "score_grid_corners",
+    "composition_eval_count",
 ]

@@ -35,9 +35,11 @@ import numpy as np
 from repro.core.select import SelectionPolicy, TaskReq
 from repro.hetero.system import SYSTEM_METRICS, tiles_for
 
-_HETERO_SCHEMA = 3     # 2: truncated also reflects per-bucket caps; budgets
+_HETERO_SCHEMA = 4     # 2: truncated also reflects per-bucket caps; budgets
 #                         pin per-slot argmin rows into the grid
 #                      3: robust (worst-corner) mode keyed into the report
+#                      4: N-level/SystemBudget/search fields on ComposePolicy
+#                         (key-breaking) + search/n_space persisted in meta
 
 
 def _task_fingerprint(task: TaskReq) -> dict:
@@ -84,7 +86,11 @@ def save_report(cache_dir: Union[str, Path], report, top_idx: np.ndarray
     meta = {"schema": _HETERO_SCHEMA, "key": key,
             "n_compositions": report.n_compositions,
             "n_feasible": report.n_feasible,
-            "truncated": report.truncated}
+            "truncated": report.truncated,
+            "search": report.search,
+            # python int end-to-end (json has no width limit; int64 wraps at
+            # 64-candidate slots past ~10 levels)
+            "n_space": int(report.n_space)}
     payload = {
         "idx": np.asarray(top_idx, np.int32),
         "rank": np.array([c.pref_rank for c in report.ranked], np.int64),
@@ -142,6 +148,8 @@ def load_report(cache_dir: Union[str, Path], table, task: TaskReq,
                              n_compositions=int(meta["n_compositions"]),
                              n_feasible=int(meta["n_feasible"]),
                              truncated=bool(meta["truncated"]),
+                             search=str(meta["search"]),
+                             n_space=int(meta["n_space"]),
                              robust=robust)
 
 

@@ -24,12 +24,14 @@ candidate lists, so the lists are kept deliberately small:
     true optimum, so caps/trimming cannot discard what an unbudgeted
     power/area objective is looking for.
 
-Budget pins: for each active budget metric (``ensure_orders``), the argmin
+Budget pins: for each active budget rail (``ensure_orders``), the extremal
 row over **every** feasible row — not just the rows the mode/order kept — is
 pinned into the list (and marked in ``BucketCandidates.pinned`` so grid
-trimming cannot drop it either). The grid therefore always evaluates the
-global min-area / min-power composition, making an all-infeasible budget
-verdict trustworthy in every mode.
+trimming cannot drop it either): argmin tiled area for "area", argmin tiled
+power for "power", argmax operating frequency for "bandwidth". The grid
+therefore always evaluates the global extremal composition for every rail of
+a ``SystemBudget``, making an all-infeasible budget verdict trustworthy in
+every mode.
 
 Slots with no feasible row get a single *sentinel* candidate
 (``family=None, config_idx=-1``) so the cross-product still forms; the
@@ -104,10 +106,12 @@ def bucket_candidates(metrics: Mapping[str, np.ndarray],
                   ordered by the row's tiled slot contribution [W]/[µm²]
                   (see module docstring). Caps/trimming keep the head, so
                   this must match the ranking objective.
-    ``ensure_orders``  budget metrics ("area"/"power") whose per-slot argmin
-                  row — over ALL feasible rows, regardless of mode — must be
-                  pinned into the list (``compose`` passes the keys of its
-                  active budgets).
+    ``ensure_orders``  budget rails ("area"/"power"/"bandwidth") whose
+                  per-slot extremal row — over ALL feasible rows, regardless
+                  of mode — must be pinned into the list (``compose`` passes
+                  ``SystemBudget.ensure_orders()``; "bandwidth" pins the
+                  argmax-``f_op_hz`` row since the bw-margin rail is a
+                  floor, not a ceiling).
     Returns a ``BucketCandidates`` whose list is never empty (sentinel when
     nothing is feasible).
     """
@@ -115,7 +119,7 @@ def bucket_candidates(metrics: Mapping[str, np.ndarray],
         raise ValueError(f"unknown candidate mode {mode!r}")
     if order_by not in ("preference", "power", "area", "balanced"):
         raise ValueError(f"unknown candidate order {order_by!r}")
-    if set(ensure_orders) - {"power", "area"}:
+    if set(ensure_orders) - {"power", "area", "bandwidth"}:
         raise ValueError(f"unknown ensure_orders {ensure_orders!r}")
     mask = feasible_mask(metrics, bucket.f_hz, bucket.lifetime_s,
                          allow_refresh=policy.allow_refresh,
@@ -173,8 +177,12 @@ def bucket_candidates(metrics: Mapping[str, np.ndarray],
         all_rows = np.concatenate([idx for _, _, idx in blocks])
         rank_fam = {int(i): (rank, fam)
                     for rank, fam, idx in blocks for i in idx}
+        f_op = np.asarray(metrics["f_op_hz"], np.float64)
         for ensure in ensure_orders:
-            contrib = sys_area if ensure == "area" else sys_power
+            # each rail's extremal contribution: min tiled area / min tiled
+            # power / max frequency (bandwidth margin is a floor)
+            contrib = {"area": sys_area, "power": sys_power,
+                       "bandwidth": -f_op}[ensure]
             r = int(all_rows[np.argmin(contrib[all_rows])])
             rank, fam = rank_fam[r]
             cand = Candidate(fam, r, rank)

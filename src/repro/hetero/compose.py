@@ -2,10 +2,15 @@
 
 ``compose(space, task)`` is the heterogeneous counterpart of
 ``repro.api.explore``: instead of picking each cache level independently it
-forms the cross-product of per-(level, bucket) candidates (see
-``repro.hetero.candidates``), prices every whole-system composition in one
-batched jnp evaluation (``repro.hetero.system``), and ranks them under a
-``ComposePolicy``. The default ``objective="preference"`` reproduces the
+forms the N-level grid of per-(level, bucket) candidates (see
+``repro.hetero.candidates``) — every level the task declares, or the
+``levels=`` subset — prices whole-system compositions in batched jnp
+evaluations (``repro.hetero.system``), and ranks them under a
+``ComposePolicy``: exhaustively for small grids, or by the provably-lossless
+branch-and-bound of ``repro.hetero.search`` when the space outgrows
+``search_threshold``. Chip-level envelopes arrive as a ``SystemBudget``
+applied to whole compositions. The default ``objective="preference"``
+reproduces the
 paper's greedy Table-2 selections exactly (the preference-rank sum of
 independent slots decomposes, and per-family representatives are chosen with
 the same power-then-area order as ``select_bucket_idx``); the other
@@ -24,9 +29,12 @@ import numpy as np
 from repro.core.select import (BucketPick, LevelReq, SelectionPolicy,
                                TaskReq, as_task_req, composition_label)
 from repro.hetero.candidates import BucketCandidates, level_candidates
-from repro.hetero.system import SYSTEM_METRICS, score_grid, tiles_for
+from repro.hetero.search import balanced_norms, branch_and_bound
+from repro.hetero.system import (SYSTEM_METRICS, SystemBudget, score_grid,
+                                 tiles_for)
 
 OBJECTIVES = ("preference", "power", "area", "balanced")
+SEARCH_MODES = ("auto", "exhaustive", "branch_and_bound")
 
 
 @dataclass(frozen=True)
@@ -50,12 +58,25 @@ class ComposePolicy:
         trimmed worst-first until the product fits. ``truncated`` is set on
         the report whenever this or ``max_candidates_per_bucket`` dropped
         feasible rows, i.e. whenever the grid was not exhaustive.
-    ``area_budget_um2`` / ``power_budget_w``  optional system budgets [µm²] /
-        [W]; compositions exceeding either are marked infeasible and sort
-        after every feasible one. Each active budget pins its per-slot
-        argmin rows into the grid past any cap, so the global min-area /
-        min-power composition is always evaluated and ``n_feasible == 0``
-        proves the budget is genuinely unmeetable.
+    ``area_budget_um2`` / ``power_budget_w``  legacy two-rail spelling of
+        ``budget`` (kept for 2-level callers); mutually exclusive with it.
+    ``budget``  optional chip-level ``SystemBudget`` (area [µm²] / power [W] /
+        bandwidth-margin [ratio] envelopes on WHOLE compositions).
+        Compositions violating any active rail are marked infeasible and
+        sort after every feasible one; each active rail pins its per-slot
+        extremal rows into the grid past any cap, so the global extremal
+        composition is always evaluated and ``n_feasible == 0`` on an
+        untruncated grid proves the budget is genuinely unmeetable.
+    ``search``  "exhaustive" scores the full cross-product grid;
+        "branch_and_bound" enumerates best-first by decomposed per-slot
+        objective contributions (``repro.hetero.search``), scoring only
+        until the top-k proof closes — identical ranking, far fewer
+        evaluations on deep hierarchies; "auto" (default) picks
+        branch-and-bound only when the composition space exceeds
+        ``search_threshold``.
+    ``search_threshold``  "auto" switchover size (full-product count).
+    ``search_batch``  branch-and-bound scoring batch (fixed shape: one jit
+        trace regardless of how many batches the search needs).
     ``top_k``  how many ranked compositions the report materializes.
     """
     objective: str = "preference"
@@ -64,12 +85,33 @@ class ComposePolicy:
     max_compositions: int = 200_000
     area_budget_um2: Optional[float] = None
     power_budget_w: Optional[float] = None
+    budget: Optional[SystemBudget] = None
+    search: str = "auto"
+    search_threshold: int = 200_000
+    search_batch: int = 512
     top_k: int = 8
 
     def __post_init__(self):
         if self.objective not in OBJECTIVES:
             raise ValueError(f"unknown objective {self.objective!r}; "
                              f"choose from {OBJECTIVES}")
+        if self.search not in SEARCH_MODES:
+            raise ValueError(f"unknown search mode {self.search!r}; "
+                             f"choose from {SEARCH_MODES}")
+        if self.budget is not None and (self.area_budget_um2 is not None
+                                        or self.power_budget_w is not None):
+            raise ValueError(
+                "pass chip envelopes either as budget=SystemBudget(...) or "
+                "via the legacy area_budget_um2/power_budget_w fields, "
+                "not both")
+
+    def system_budget(self) -> SystemBudget:
+        """The effective chip-level budget: ``budget`` if given, else the
+        legacy two-rail fields folded into a ``SystemBudget``."""
+        if self.budget is not None:
+            return self.budget
+        return SystemBudget(area_um2=self.area_budget_um2,
+                            power_w=self.power_budget_w)
 
 
 @dataclass(frozen=True)
@@ -123,9 +165,13 @@ class CompositionReport:
     """Result of one ``compose()`` call.
 
     ``ranked`` is best-first (``best`` is ``ranked[0]``); ``n_compositions``
-    is the evaluated grid size and ``n_feasible`` how many passed slot
-    feasibility + budgets. ``truncated`` flags a non-exhaustive grid: either
-    ``max_compositions`` trimmed candidate lists or
+    is the number of compositions actually scored and ``n_feasible`` how many
+    of THOSE passed slot feasibility + budgets — under
+    ``search="branch_and_bound"`` that is the enumerated subset (``n_space``
+    records the full cross-product size), under "exhaustive" the whole grid
+    (``n_compositions == n_space`` unless trimmed). ``truncated`` flags a
+    lossy search: ``max_compositions`` trimmed the exhaustive grid / stopped
+    the branch-and-bound walk before its bound proof closed, or
     ``max_candidates_per_bucket`` capped a slot.
     """
     table: object                       # repro.api.DesignTable
@@ -136,6 +182,11 @@ class CompositionReport:
     n_compositions: int
     n_feasible: int
     truncated: bool = False
+    # which engine ranked the grid ("exhaustive" | "branch_and_bound") and
+    # the untrimmed cross-product size it drew from (python int: 64-candidate
+    # slots at depth overflow int64)
+    search: str = "exhaustive"
+    n_space: int = 0
     # set to "simulate" by the repro.sim re-rank: ``ranked`` is then ordered
     # by trace-replayed energy/latency and every composition's ``metrics``
     # carries the ``sim_*`` keys
@@ -223,7 +274,8 @@ def _composition_grid(slots: Sequence[BucketCandidates],
                       max_compositions: int):
     """Cross-product of per-slot candidates.
 
-    Returns ``(idx (J,S) int32, rank_sum (J,), truncated)``.
+    Returns ``(idx (J,S) int32, pos (J,S) candidate-list positions,
+    rank_sum (J,), truncated)``.
     """
     lists, truncated = _trim_to_budget(slots, max_compositions)
     counts = [len(c) for c in lists]
@@ -235,12 +287,24 @@ def _composition_grid(slots: Sequence[BucketCandidates],
         rk = np.array([c.pref_rank for c in cands], np.int64)
         idx[:, s] = cfg[pos[s]]
         ranks += rk[pos[s]]
-    return idx, ranks, truncated
+    return idx, pos.T, ranks, truncated
 
 
 def _order(scores: Dict[str, np.ndarray], rank_sum: np.ndarray,
-           feasible: np.ndarray, cp: ComposePolicy) -> np.ndarray:
-    """Best-first permutation of the composition grid under the objective."""
+           feasible: np.ndarray, cp: ComposePolicy, pos: np.ndarray,
+           norms: Optional[Tuple[float, float]] = None) -> np.ndarray:
+    """Best-first permutation of the composition grid under the objective.
+
+    ``pos`` is the (J, S) candidate-list position matrix: its columns are
+    the lowest-priority tie-break keys (slot 0 most significant), which is
+    exactly the row-major order ``np.indices`` lays the exhaustive grid out
+    in — so the exhaustive ranking is unchanged from a plain stable lexsort,
+    and the branch-and-bound path (which scores the same compositions in a
+    different order) breaks metric ties identically. ``norms`` carries the
+    analytic ``(a0 [µm²], p0 [W])`` normalizers for "balanced"
+    (``repro.hetero.search.balanced_norms``) — a function of the candidate
+    lists alone, so both search paths normalize identically.
+    """
     infeas = (~feasible).astype(np.int64)
     big = np.finfo(np.float64).max
 
@@ -248,6 +312,7 @@ def _order(scores: Dict[str, np.ndarray], rank_sum: np.ndarray,
         return np.nan_to_num(np.asarray(scores[name], np.float64), posinf=big)
 
     area, p_st, p_w = finite("area_um2"), finite("p_static_w"), finite("p_w")
+    ties = tuple(pos[:, s] for s in reversed(range(pos.shape[1])))
     if cp.objective == "preference":
         keys = (area, p_st, rank_sum, infeas)
     elif cp.objective == "power":
@@ -255,12 +320,16 @@ def _order(scores: Dict[str, np.ndarray], rank_sum: np.ndarray,
     elif cp.objective == "area":
         keys = (p_w, area, infeas)
     else:                                           # balanced
-        fa = area[feasible] if feasible.any() else area
-        fp = p_w[feasible] if feasible.any() else p_w
-        a0 = max(float(np.min(fa)), 1e-30)
-        p0 = max(float(np.min(fp)), 1e-30)
-        keys = (area / a0 + p_w / p0, infeas)
-    return np.lexsort(keys)                # last key is the primary sort
+        if norms is not None:
+            a0, p0 = norms
+        else:
+            fa = area[feasible] if feasible.any() else area
+            fp = p_w[feasible] if feasible.any() else p_w
+            a0 = max(float(np.min(fa)), 1e-30)
+            p0 = max(float(np.min(fp)), 1e-30)
+        with np.errstate(over="ignore"):    # sentinel rows: max/a0 -> inf,
+            keys = (area / a0 + p_w / p0, infeas)   # which sorts last anyway
+    return np.lexsort(ties + keys)         # last key is the primary sort
 
 
 # ---------------------------------------------------------------------------
@@ -297,7 +366,8 @@ def compose(space=None, task=None, policy: Optional[SelectionPolicy] = None,
             cache=None, sharded: bool = False,
             refine: Optional[str] = None,
             sim_policy=None, corners=None,
-            robust: Optional[str] = None) -> CompositionReport:
+            robust: Optional[str] = None,
+            levels: Optional[Sequence[str]] = None) -> CompositionReport:
     """Joint heterogeneous composition for one task.
 
     ``space``   MacroConfig list, a built ``DesignTable``, or None for the
@@ -324,6 +394,9 @@ def compose(space=None, task=None, policy: Optional[SelectionPolicy] = None,
                 scoring on the per-row worst corner, so the winning
                 composition must hold at EVERY corner; None uses the base
                 (``corners[0]``) columns.
+    ``levels``  optional level-name subset (e.g. ``("L1", "L2")``) composed
+                in the given order; None composes every level the task
+                declares. Unknown names raise ``KeyError``.
     """
     from repro.api import DesignTable           # runtime: avoids module cycle
     if refine not in (None, "simulate"):
@@ -333,6 +406,13 @@ def compose(space=None, task=None, policy: Optional[SelectionPolicy] = None,
         raise TypeError("compose() requires a task "
                         "(e.g. repro.core.gainsight.TASKS[0])")
     task = as_task_req(task)
+    if levels is not None:
+        missing = [n for n in levels if n not in task.levels]
+        if missing:
+            raise KeyError(f"task {task.task_id!r} has no level(s) {missing};"
+                           f" available: {list(task.levels)}")
+        task = TaskReq(task.task_id, task.name,
+                       {n: task.levels[n] for n in levels})
     policy = policy or SelectionPolicy()
     cp = compose_policy or ComposePolicy()
     table = DesignTable.build(space, cache=cache, corners=corners)
@@ -359,29 +439,38 @@ def compose(space=None, task=None, policy: Optional[SelectionPolicy] = None,
     # the budget is truly unmeetable (not a cap artifact)
     order_by = cp.objective if cp.objective in ("power", "area", "balanced") \
         else "preference"
-    ensure = tuple(k for k, budget in (("area", cp.area_budget_um2),
-                                       ("power", cp.power_budget_w))
-                   if budget is not None)
+    budget = cp.system_budget()
     slots: Tuple[BucketCandidates, ...] = tuple(
         bc for level in task.levels.values()
         for bc in level_candidates(metrics, fam_col, level, policy,
                                    mode=cp.candidate_mode,
                                    max_per_bucket=cp.max_candidates_per_bucket,
-                                   order_by=order_by, ensure_orders=ensure))
+                                   order_by=order_by,
+                                   ensure_orders=budget.ensure_orders()))
     cap_bits = np.array([bc.capacity_bits for bc in slots], np.float64)
     f_req = np.array([bc.bucket.f_hz for bc in slots], np.float64)
 
-    idx, rank_sum, truncated = _composition_grid(slots, cp.max_compositions)
+    # full cross-product size as a python int: 64-candidate slots at 11+
+    # levels overflow int64, and this number keys the auto search switch
+    n_space = math.prod(len(bc.candidates) for bc in slots)
+    use_bb = (cp.search == "branch_and_bound"
+              or (cp.search == "auto" and n_space > cp.search_threshold))
+    norms = balanced_norms(slots, metrics) \
+        if cp.objective == "balanced" else None
+    if use_bb:
+        idx, pos, rank_sum, scores, truncated, _ = branch_and_bound(
+            slots, metrics, cap_bits, f_req, cp.objective, budget,
+            top_k=cp.top_k, max_nodes=cp.max_compositions,
+            batch=cp.search_batch, sharded=sharded)
+    else:
+        idx, pos, rank_sum, truncated = _composition_grid(
+            slots, cp.max_compositions)
+        scores = score_grid(metrics, idx, cap_bits, f_req, sharded=sharded)
     truncated = truncated or any(bc.capped for bc in slots)
-    scores = score_grid(metrics, idx, cap_bits, f_req, sharded=sharded)
 
-    feasible = np.all(idx >= 0, axis=1)
-    if cp.area_budget_um2 is not None:
-        feasible &= scores["area_um2"] <= cp.area_budget_um2
-    if cp.power_budget_w is not None:
-        feasible &= scores["p_w"] <= cp.power_budget_w
+    feasible = np.all(idx >= 0, axis=1) & budget.feasible(scores)
 
-    order = _order(scores, rank_sum, feasible, cp)
+    order = _order(scores, rank_sum, feasible, cp, pos, norms)
     top = order[:max(cp.top_k, 1)]
     tiles = tiles_for(metrics, idx[top], cap_bits)
     ranked = tuple(
@@ -393,7 +482,10 @@ def compose(space=None, task=None, policy: Optional[SelectionPolicy] = None,
                                compose_policy=cp, ranked=ranked,
                                n_compositions=int(idx.shape[0]),
                                n_feasible=int(feasible.sum()),
-                               truncated=truncated, robust=robust)
+                               truncated=truncated, robust=robust,
+                               search=("branch_and_bound" if use_bb
+                                       else "exhaustive"),
+                               n_space=int(n_space))
     if cache is not None:
         from repro.hetero import cache as cache_mod
         cache_mod.save_report(cache, report, idx[top])

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import repro.hetero.system  # noqa: F401  (registers the compose_score op)
 import repro.sim.engine  # noqa: F401  (registers the sim_replay op)
 from repro.core import bitcells, devices, retention
 from repro.kernels import backend, ops  # noqa: F401  (registers kernel ops)
@@ -77,6 +78,21 @@ def _sim_replay_inputs():
     return (params, slot, xs, consts), {}
 
 
+def _compose_score_inputs():
+    from repro.hetero.system import METRIC_COLS
+    rng = np.random.default_rng(14)
+    n, J, S = 12, 9, 3
+    scale = {"area_um2": 1e4, "bits": 65536.0, "p_leak_w": 1e-5,
+             "p_refresh_w": 1e-6, "e_read_j": 1e-12, "f_op_hz": 2e9}
+    cols = {k: jnp.asarray(scale[k] * rng.uniform(0.5, 1.5, n), jnp.float32)
+            for k in METRIC_COLS}
+    idx = rng.integers(0, n, (J, S)).astype(np.int32)
+    idx[-1, 1] = -1         # a sentinel slot: both impls must price it +inf
+    cap = jnp.asarray([1e6, 4e6, 2e5], jnp.float32)
+    f_req = jnp.asarray([1.5e9, 4e8, 8e8], jnp.float32)
+    return (jnp.asarray(idx), cols, cap, f_req), {}
+
+
 # op -> (input builder, rtol/atol budget). sim_replay's interpret path is a
 # Python loop over the very scan the xla path vmaps, so it must agree to
 # float32 roundoff; the Pallas kernels accumulate in different block orders
@@ -86,6 +102,9 @@ BUILDERS = {
     "ssm_scan": (_ssm_inputs, 1e-4),
     "retention": (_retention_inputs, 1e-5),
     "sim_replay": (_sim_replay_inputs, 1e-6),
+    # numpy float32 mirror of the one-dispatch gather/reduce scorer: same
+    # dtype, same reduction order (axis-1 sums) — float32 roundoff only
+    "compose_score": (_compose_score_inputs, 1e-6),
 }
 
 
