@@ -1,0 +1,171 @@
+"""Perf-regression diff of BENCH_*.json records against committed baselines.
+
+``python -m benchmarks.run --quick --compare benchmarks/baselines`` runs the
+benchmark suite and then this module: every emitted ``BENCH_*.json`` is
+flattened (nested dicts become dotted keys) and diffed per-metric against the
+same-named file in the baseline directory. Classification:
+
+- **environment keys** (``jax``, ``backend``, ``devices``, ``quick``, ...)
+  are recorded but never judged — CI machines legitimately differ.
+- **exactness keys** (``table2_matches``, ``identical_best``, ``matches``,
+  ``best_labels``, ``arch_labels``) must match bit-for-bit; any drift is a
+  ``regression`` — these encode paper-parity, not speed.
+- **rates** (``*_per_s``): higher is better. current/baseline below
+  ``rate_tolerance`` -> ``regression``; above ``1/rate_tolerance`` ->
+  ``improved``. The default tolerance (0.5, i.e. 2x either way) is wide on
+  purpose: shared CI runners are noisy and the diff is informational.
+- **times** (``*_s``, ``*_ms``, ``latency*``): lower is better, same 2x
+  band inverted.
+- anything else numeric that moved is ``changed`` (informational).
+
+The result is written as ``BENCH_diff.json`` with an ``ok`` flag and the
+list of regressions; the exit code stays 0 unless ``--fail-on-regression``
+is passed (CI uploads the diff as an artifact instead of failing the build).
+"""
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+# keys describing the machine / invocation, not the result
+ENV_KEYS = {"bench", "quick", "jax", "backend", "devices", "cache"}
+# keys encoding paper parity / search correctness: compared exactly
+EXACT_KEYS = {"table2_matches", "identical_best", "matches", "best_labels",
+              "arch_labels", "configs", "corners", "rows", "slots", "task",
+              "grid", "n_space"}
+
+
+def flatten(record: Dict[str, Any], prefix: str = "") -> Dict[str, Any]:
+    """``{"sweep": {"rows_per_s": 9e3}}`` -> ``{"sweep.rows_per_s": 9e3}``."""
+    out: Dict[str, Any] = {}
+    for k, v in record.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict) and v and all(isinstance(x, str)
+                                             for x in v.values()):
+            out[key] = v                      # label maps stay atomic
+        elif isinstance(v, dict):
+            out.update(flatten(v, prefix=f"{key}."))
+        else:
+            out[key] = v
+    return out
+
+
+def _leaf(key: str) -> str:
+    return key.rsplit(".", 1)[-1]
+
+
+def _is_env(key: str) -> bool:
+    return _leaf(key) in ENV_KEYS
+
+
+def _is_exact(key: str) -> bool:
+    return _leaf(key) in EXACT_KEYS
+
+
+def _is_rate(key: str) -> bool:
+    return _leaf(key).endswith("_per_s")
+
+
+def _is_time(key: str) -> bool:
+    leaf = _leaf(key)
+    return (leaf.endswith("_s") or leaf.endswith("_ms")
+            or leaf.startswith("latency")) and not leaf.endswith("_per_s")
+
+
+def _ratio(base, cur) -> Optional[float]:
+    try:
+        b, c = float(base), float(cur)
+    except (TypeError, ValueError):
+        return None
+    if not (math.isfinite(b) and math.isfinite(c)) or b <= 0:
+        return None
+    return c / b
+
+
+def diff_records(baseline: Dict[str, Any], current: Dict[str, Any],
+                 rate_tolerance: float = 0.5) -> Dict[str, Any]:
+    """Per-metric diff of two flattened-able records. Returns
+    ``{"metrics": {key: {...}}, "regressions": [...], "ok": bool}``."""
+    base, cur = flatten(baseline), flatten(current)
+    metrics: Dict[str, Any] = {}
+    regressions = []
+    for key in sorted(set(base) | set(cur)):
+        b, c = base.get(key), cur.get(key)
+        entry: Dict[str, Any] = {"baseline": b, "current": c}
+        if _is_env(key):
+            entry["status"] = "env"
+        elif b is None or c is None:
+            entry["status"] = "missing"
+        elif _is_exact(key):
+            entry["status"] = "ok" if b == c else "regression"
+        elif _is_rate(key) or _is_time(key):
+            r = _ratio(b, c)
+            entry["ratio"] = None if r is None else round(r, 4)
+            if r is None:
+                entry["status"] = "ok" if b == c else "changed"
+            else:
+                # normalize so that lo < tolerance always means "got worse"
+                lo = r if _is_rate(key) else (1.0 / r if r > 0 else 0.0)
+                entry["status"] = ("regression" if lo < rate_tolerance else
+                                   "improved" if lo > 1.0 / rate_tolerance
+                                   else "ok")
+        elif b == c:
+            entry["status"] = "ok"
+        else:
+            entry["status"] = "changed"
+        if entry["status"] == "regression":
+            regressions.append(key)
+        metrics[key] = entry
+    return {"metrics": metrics, "regressions": regressions,
+            "ok": not regressions}
+
+
+def diff_suite(baseline_dir, current_dir,
+               rate_tolerance: float = 0.5) -> Dict[str, Any]:
+    """Diff every ``BENCH_*.json`` in ``current_dir`` against the same-named
+    baseline. Baselines with no current record (and vice versa) are reported,
+    not failed — benches can be added without regenerating everything."""
+    bdir, cdir = Path(baseline_dir), Path(current_dir)
+    names = sorted(({p.name for p in bdir.glob("BENCH_*.json")}
+                    | {p.name for p in cdir.glob("BENCH_*.json")})
+                   - {"BENCH_diff.json"})
+    benches: Dict[str, Any] = {}
+    regressions = []
+    for name in names:
+        bp, cp = bdir / name, cdir / name
+        if not bp.exists() or not cp.exists():
+            benches[name] = {"status": "missing",
+                             "baseline": bp.exists(), "current": cp.exists()}
+            continue
+        d = diff_records(json.loads(bp.read_text()),
+                         json.loads(cp.read_text()),
+                         rate_tolerance=rate_tolerance)
+        benches[name] = d
+        regressions += [f"{name}:{k}" for k in d["regressions"]]
+    return {"baseline_dir": str(bdir), "current_dir": str(cdir),
+            "rate_tolerance": rate_tolerance, "benches": benches,
+            "regressions": regressions, "ok": not regressions}
+
+
+def summarize(diff: Dict[str, Any]) -> str:
+    lines = [f"bench compare vs {diff['baseline_dir']} "
+             f"(tolerance {diff['rate_tolerance']}x)"]
+    for name, d in diff["benches"].items():
+        if d.get("status") == "missing":
+            side = "baseline" if not d["baseline"] else "current"
+            lines.append(f"  {name}: missing {side} record")
+            continue
+        counts: Dict[str, int] = {}
+        for m in d["metrics"].values():
+            counts[m["status"]] = counts.get(m["status"], 0) + 1
+        lines.append(f"  {name}: " + ", ".join(
+            f"{v} {k}" for k, v in sorted(counts.items())))
+        for key in d["regressions"]:
+            m = d["metrics"][key]
+            lines.append(f"    REGRESSION {key}: "
+                         f"{m['baseline']} -> {m['current']}")
+    lines.append("ok" if diff["ok"]
+                 else f"{len(diff['regressions'])} regression(s)")
+    return "\n".join(lines)

@@ -1,16 +1,46 @@
-"""Benchmark harness: one function per paper table/figure + compiler-throughput
-and roofline summaries. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: CSV summary (default) or the JSON suite + compare mode.
+
+Default (no flags) prints the legacy ``name,us_per_call,derived`` CSV —
+one line per paper table/figure plus compiler-throughput and roofline
+summaries::
 
     pip install -e . && python -m benchmarks.run
+
+Suite mode runs the four record-emitting benchmark modules **in-process**
+(one process, so a single ``REPRO_TRACE`` trace covers the whole suite) and
+optionally diffs the emitted ``BENCH_*.json`` set against committed
+baselines (``benchmarks/compare.py``)::
+
+    python -m benchmarks.run --quick --compare benchmarks/baselines
+
+Emitted file set (the *only* BENCH files this repo produces; committed
+baselines live under ``benchmarks/baselines/``):
+
+    BENCH_hetero.json          benchmarks.hetero_dse
+    BENCH_hetero_nlevel.json   benchmarks.hetero_nlevel
+    BENCH_sim.json             benchmarks.sim_replay
+    BENCH_corners.json         benchmarks.corner_sweep
+    BENCH_diff.json            the compare result (suite mode only)
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 from pathlib import Path
 
 if __package__ in (None, ""):                    # `python benchmarks/run.py`
     sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+# (bench label, module name, emitted record file) — keep in sync with the
+# committed baseline set and docs/OBSERVABILITY.md
+SUITE = (
+    ("hetero", "benchmarks.hetero_dse", "BENCH_hetero.json"),
+    ("hetero_nlevel", "benchmarks.hetero_nlevel", "BENCH_hetero_nlevel.json"),
+    ("sim", "benchmarks.sim_replay", "BENCH_sim.json"),
+    ("corners", "benchmarks.corner_sweep", "BENCH_corners.json"),
+)
 
 
 def _timed(fn, repeats=1):
@@ -22,7 +52,65 @@ def _timed(fn, repeats=1):
     return out, dt * 1e6
 
 
-def main() -> None:
+def run_suite(quick: bool, out_dir: Path,
+              compare_dir=None, rate_tolerance: float = 0.5) -> dict:
+    """Run every SUITE module main() in-process, then (optionally) diff the
+    emitted records against ``compare_dir``. Returns the diff (or a stub
+    with ``ok=True`` when no compare was requested)."""
+    import importlib
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for label, modname, fname in SUITE:
+        print(f"[suite] {label}: python -m {modname}"
+              f"{' --quick' if quick else ''}", flush=True)
+        mod = importlib.import_module(modname)
+        argv = ["--out", str(out_dir / fname)] + (["--quick"] if quick else [])
+        mod.main(argv)
+
+    if compare_dir is None:
+        return {"ok": True, "benches": {}, "regressions": []}
+
+    from benchmarks import compare
+
+    diff = compare.diff_suite(compare_dir, out_dir,
+                              rate_tolerance=rate_tolerance)
+    diff_path = out_dir / "BENCH_diff.json"
+    diff_path.write_text(json.dumps(diff, indent=2) + "\n")
+    print(compare.summarize(diff))
+    print(f"[suite] wrote {diff_path}")
+    return diff
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="suite mode, CI-sized grids")
+    ap.add_argument("--suite", action="store_true",
+                    help="suite mode, full grids")
+    ap.add_argument("--compare", metavar="BASELINE_DIR", default=None,
+                    help="diff emitted BENCH_*.json against this directory "
+                         "and write BENCH_diff.json (implies suite mode)")
+    ap.add_argument("--out-dir", default=".",
+                    help="where suite mode writes BENCH_*.json (default: cwd)")
+    ap.add_argument("--rate-tolerance", type=float, default=0.5,
+                    help="throughput ratio below this is a regression "
+                         "(default 0.5 = 2x band)")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="exit 1 when the compare finds regressions "
+                         "(default: informational, exit 0)")
+    args = ap.parse_args(argv)
+
+    if args.quick or args.suite or args.compare is not None:
+        diff = run_suite(args.quick, Path(args.out_dir),
+                         compare_dir=args.compare,
+                         rate_tolerance=args.rate_tolerance)
+        if args.fail_on_regression and not diff["ok"]:
+            sys.exit(1)
+        return
+    _csv_main()
+
+
+def _csv_main() -> None:
     from benchmarks import paper_figs
 
     print("name,us_per_call,derived")

@@ -11,7 +11,8 @@ package is not installed.
 
     python scripts/check_docs.py [files...]     # default: docs/*.md README.md
 
-Exit status 0 = all links resolve and every rule ID is documented; 1
+Exit status 0 = all links resolve, every rule ID is documented, and every
+``repro.obs`` span/metric catalog name appears in docs/OBSERVABILITY.md; 1
 otherwise (findings listed on stderr). The full analyzer (same checks plus
 CK/JP/US/BK) is ``python -m repro.analysis --docs``.
 """
@@ -39,6 +40,7 @@ def main(argv=None) -> int:
     files = [Path(a).resolve() for a in args] if args else None
     findings = docs.check_links(REPO, files=files)
     findings += docs.check_rule_docs(REPO, sorted(rules.RULES))
+    findings += docs.check_obs_docs(REPO)
     if findings:
         for f in findings:
             loc = f"{f['path']}:{f['line']}" if f["line"] else f["path"]

@@ -8,6 +8,8 @@ installed (the pre-commit hook, bare checkouts).
 DC01  a markdown link targets a file that does not exist
 DC02  a markdown link targets a ``#anchor`` with no matching heading slug
 DC03  an analyzer rule ID is not documented in ``docs/ANALYSIS.md``
+DC04  an ``repro.obs`` catalog entry (span/metric name) is not documented
+      in ``docs/OBSERVABILITY.md``
 
 Findings are returned as plain dicts (``rule``/``path``/``line``/
 ``message``/``snippet``) so this module does not depend on
@@ -25,6 +27,8 @@ _HEADING = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$", re.M)
 _EXTERNAL = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")  # http:, mailto:, ...
 
 RULE_CATALOG_MD = "docs/ANALYSIS.md"
+OBS_CATALOG_MD = "docs/OBSERVABILITY.md"
+OBS_CATALOG_PY = "src/repro/obs/catalog.py"
 
 
 def _finding(rule: str, path: str, line: int, message: str,
@@ -121,6 +125,43 @@ def check_rule_docs(root, rule_ids: Sequence[str]) -> List[Dict[str, object]]:
                 "DC03", RULE_CATALOG_MD, 0,
                 f"rule {rid} is not documented in docs/ANALYSIS.md",
                 snippet=rid))
+    return out
+
+
+def check_obs_docs(root) -> List[Dict[str, object]]:
+    """DC04: every span/metric name in the ``repro.obs`` catalog must appear
+    backticked in docs/OBSERVABILITY.md.
+
+    The catalog module is loaded standalone via importlib (it is stdlib-only
+    pure data by contract), so this check — like the rest of this file —
+    works without the ``repro`` package importable.
+    """
+    import importlib.util
+
+    root = Path(root)
+    cat_py = root / OBS_CATALOG_PY
+    if not cat_py.exists():
+        return [_finding("DC04", OBS_CATALOG_PY, 0,
+                         "obs catalog module does not exist",
+                         snippet=OBS_CATALOG_PY)]
+    spec = importlib.util.spec_from_file_location("_obs_catalog", cat_py)
+    catalog = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(catalog)
+
+    doc = root / OBS_CATALOG_MD
+    if not doc.exists():
+        return [_finding("DC04", OBS_CATALOG_MD, 0,
+                         "obs catalog docs/OBSERVABILITY.md does not exist",
+                         snippet=OBS_CATALOG_MD)]
+    body = doc.read_text(encoding="utf-8")
+    out = []
+    for kind, names in (("span", catalog.SPANS), ("metric", catalog.METRICS)):
+        for name in names:
+            if f"`{name}`" not in body:
+                out.append(_finding(
+                    "DC04", OBS_CATALOG_MD, 0,
+                    f"obs {kind} {name!r} is not documented in "
+                    f"docs/OBSERVABILITY.md", snippet=name))
     return out
 
 

@@ -75,6 +75,9 @@ RULES = {
              "a markdown link targets a #anchor with no matching heading"),
     "DC03": ("rule-undocumented",
              "an analyzer rule ID is not documented in docs/ANALYSIS.md"),
+    "DC04": ("obs-name-undocumented",
+             "a repro.obs catalog entry (span/metric name) is not documented "
+             "in docs/OBSERVABILITY.md"),
     "PB01": ("pallas-block-out-of-bounds",
              "a BlockSpec index_map addresses a block outside the (padded) "
              "operand for some point of the launch grid"),

@@ -111,6 +111,8 @@ def run_analysis(root, checks: Optional[Sequence[str]] = None,
             raw.append(Finding(**d))
         for d in docs_mod.check_rule_docs(root, sorted(RULES)):
             raw.append(Finding(**d))
+        for d in docs_mod.check_obs_docs(root):
+            raw.append(Finding(**d))
         families_run.append("DC")
 
     # inline noqa

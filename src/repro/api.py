@@ -51,6 +51,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro import obs
 from repro.core import artifacts as artifacts_mod
 from repro.core import bitcells, characterize as chz, layout as layout_mod
 from repro.core import corners as corners_mod
@@ -106,8 +107,12 @@ def _hash_seed() -> "hashlib._Hash":
     return hashlib.sha256(
         f"schema={_SCHEMA_VERSION};physics={_physics_fingerprint()}".encode())
 
-# how many times the vmap characterization actually ran (cache-hit proof)
-_vmap_characterize_calls = 0
+# how many times the vmap characterization actually ran (cache-hit proof);
+# lives on the repro.obs metrics registry, read through the thin alias below
+# so existing cache-proof tests and callers are unchanged
+_C_CHARACTERIZE = obs.counter("api.characterize_calls")
+_C_TABLE_HIT = obs.counter("api.table_cache_hits")
+_C_TABLE_MISS = obs.counter("api.table_cache_misses")
 
 
 def characterize_call_count() -> int:
@@ -115,8 +120,9 @@ def characterize_call_count() -> int:
 
     A ``DesignTable`` cache hit leaves this counter unchanged — tests use it
     to prove that repeated ``explore()`` calls skip the re-characterization.
+    (Backed by the ``api.characterize_calls`` obs counter.)
     """
-    return _vmap_characterize_calls
+    return _C_CHARACTERIZE.value
 
 
 DEFAULT_MEM_TYPES = ("sram6t", "gc_sisi", "gc_ossi")
@@ -202,25 +208,26 @@ class DesignTable:
 
         ``corners``: operating points to batch over (None = nominal only;
         the nominal-only path is byte-identical to the pre-corner one)."""
-        global _vmap_characterize_calls
         import jax.numpy as jnp
 
         from repro.analysis import sanitize
         ops = corners_mod.as_corners(corners)
         vecs = jnp.stack([c.to_vector() for c in configs])
-        if ops == (corners_mod.NOMINAL,):
-            out = sanitize.maybe_wrap(chz.characterize_batch)(vecs)
-            metrics = {k: np.asarray(v) for k, v in out.items()}
-        else:
-            out = sanitize.maybe_wrap(
-                lambda v: chz.characterize_corners(v, ops))(vecs)
-            metrics = {}
-            for k, v in out.items():
-                grid = np.asarray(v)                    # (N, C)
-                metrics[k] = grid[:, 0]
-                for c, op in enumerate(ops):
-                    metrics[f"{k}@{op.corner}"] = grid[:, c]
-        _vmap_characterize_calls += 1
+        with obs.span("api.characterize", probe=chz.characterize_batch,
+                      n_configs=len(configs), n_corners=len(ops)):
+            if ops == (corners_mod.NOMINAL,):
+                out = sanitize.maybe_wrap(chz.characterize_batch)(vecs)
+                metrics = {k: np.asarray(v) for k, v in out.items()}
+            else:
+                out = sanitize.maybe_wrap(
+                    lambda v: chz.characterize_corners(v, ops))(vecs)
+                metrics = {}
+                for k, v in out.items():
+                    grid = np.asarray(v)                    # (N, C)
+                    metrics[k] = grid[:, 0]
+                    for c, op in enumerate(ops):
+                        metrics[f"{k}@{op.corner}"] = grid[:, c]
+        _C_CHARACTERIZE.inc()
         axes = {
             "mem_type": np.array([c.mem_type for c in configs]),
             "word_size": np.array([c.word_size for c in configs], np.int64),
@@ -255,16 +262,22 @@ class DesignTable:
             return cls.from_configs(configs, corners=corners)
         cache_path = Path(cache) / \
             f"table_{grid_hash(configs, corners=corners)}.npz"
-        if cache_path.exists():
-            try:
-                return cls.load(cache_path)
-            except Exception as e:     # corrupt / stale cache: rebuild it
-                warnings.warn(f"ignoring unreadable DesignTable cache "
-                              f"{cache_path}: {e}", RuntimeWarning,
-                              stacklevel=2)
-        table = cls.from_configs(configs, corners=corners)
-        table.save(cache_path)
-        return table
+        with obs.span("api.table_build", n_configs=len(configs)) as sp:
+            if cache_path.exists():
+                try:
+                    table = cls.load(cache_path)
+                    _C_TABLE_HIT.inc()
+                    sp.set(cache="hit")
+                    return table
+                except Exception as e:     # corrupt / stale cache: rebuild it
+                    warnings.warn(f"ignoring unreadable DesignTable cache "
+                                  f"{cache_path}: {e}", RuntimeWarning,
+                                  stacklevel=2)
+            _C_TABLE_MISS.inc()
+            sp.set(cache="miss")
+            table = cls.from_configs(configs, corners=corners)
+            table.save(cache_path)
+            return table
 
     def save(self, path: Union[str, Path]) -> Path:
         """Persist axes + metrics to ``path`` (npz, stamped with the grid
@@ -590,10 +603,14 @@ class Compiler:
     the checkify runtime sanitizer (nan + index checks, see
     ``repro.analysis.sanitize``) — numerically identical outputs, raises on
     the first NaN/Inf or out-of-bounds gather instead of propagating it.
+    ``telemetry=True`` records ``repro.obs`` spans for every call this
+    instance launches (same events ``REPRO_TRACE`` enables process-wide);
+    off (default) the obs layer is a no-op and outputs are bit-identical.
     """
     tech: str = "gf22"
     mem_types: Tuple[str, ...] = DEFAULT_MEM_TYPES
     sanitize: bool = False
+    telemetry: bool = False
 
     def __post_init__(self):
         unknown = [m for m in self.mem_types if m not in bitcells.BITCELLS]
@@ -610,6 +627,14 @@ class Compiler:
         from repro.analysis import sanitize as sanitize_mod
         return sanitize_mod.enabled_scope(True)
 
+    def _obs_scope(self):
+        """Force-enable span recording for calls made by this instance;
+        a plain Compiler() leaves the ambient REPRO_TRACE setting in
+        charge instead of force-disabling it."""
+        if not self.telemetry:
+            return contextlib.nullcontext()
+        return obs.enabled_scope(True)
+
     # ------------------------------------------------------------- compile
     def compile(self, config: Optional[MacroConfig] = None,
                 **overrides) -> Macro:
@@ -624,7 +649,10 @@ class Compiler:
             config = dataclasses.replace(config, **overrides)
         if config.mem_type not in bitcells.BITCELLS:
             raise KeyError(f"unknown mem_type {config.mem_type!r}")
-        with self._sanitize_scope():
+        with self._sanitize_scope(), self._obs_scope(), \
+                obs.span("api.compile", mem_type=config.mem_type,
+                         word_size=config.word_size,
+                         num_words=config.num_words):
             return Macro(config=config, ppa=chz.characterize_config(config,
                                                                     tp=op))
 
@@ -638,7 +666,7 @@ class Compiler:
               corners=None) -> DesignTable:
         if space is None:
             space = self.design_space()
-        with self._sanitize_scope():
+        with self._sanitize_scope(), self._obs_scope():
             return DesignTable.build(space, cache=cache, corners=corners)
 
     def explore(self, tasks=None, space: SpaceLike = None,
@@ -653,7 +681,7 @@ class Compiler:
         """
         if space is None:
             space = self.design_space()
-        with self._sanitize_scope():
+        with self._sanitize_scope(), self._obs_scope():
             return explore(space=space, tasks=tasks, policy=policy,
                            cache=cache, corners=corners, robust=robust)
 
@@ -693,7 +721,7 @@ class Compiler:
         """
         if space is None:
             space = self.design_space()
-        with self._sanitize_scope():
+        with self._sanitize_scope(), self._obs_scope():
             return compose(space=space, task=task, policy=policy,
                            compose_policy=compose_policy, cache=cache,
                            sharded=sharded, refine=refine,
@@ -820,14 +848,16 @@ def explore(space: SpaceLike = None, tasks=None,
         tasks = gainsight.TASKS
     task_reqs = tuple(as_task_req(t) for t in tasks)
     policy = policy or SelectionPolicy()
-    table = DesignTable.build(space, cache=cache, corners=corners)
-    metrics = table.robust_metrics(robust)
-    families = table.families
-    selections: Dict[object, Dict[str, LevelSelection]] = {}
-    for t in task_reqs:
-        selections[t.task_id] = {
-            lvl: select_level(metrics, families, req, policy)
-            for lvl, req in t.levels.items()}
+    with obs.span("api.explore", n_tasks=len(task_reqs),
+                  robust=robust or "nominal"):
+        table = DesignTable.build(space, cache=cache, corners=corners)
+        metrics = table.robust_metrics(robust)
+        families = table.families
+        selections: Dict[object, Dict[str, LevelSelection]] = {}
+        for t in task_reqs:
+            selections[t.task_id] = {
+                lvl: select_level(metrics, families, req, policy)
+                for lvl, req in t.levels.items()}
     return DSEReport(table=table, tasks=task_reqs, policy=policy,
                      selections=selections, robust=robust)
 

@@ -26,6 +26,7 @@ from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.select import (BucketPick, LevelReq, SelectionPolicy,
                                TaskReq, as_task_req, composition_label)
 from repro.hetero.candidates import BucketCandidates, level_candidates
@@ -35,6 +36,11 @@ from repro.hetero.system import (SYSTEM_METRICS, SystemBudget, score_grid,
 
 OBJECTIVES = ("preference", "power", "area", "balanced")
 SEARCH_MODES = ("auto", "exhaustive", "branch_and_bound")
+
+# composition-report cache traffic (repro.obs registry; a hit proves the
+# repeat compose() re-ran neither the scoring nor the search)
+_C_CACHE_HIT = obs.counter("hetero.cache_hits")
+_C_CACHE_MISS = obs.counter("hetero.cache_misses")
 
 
 @dataclass(frozen=True)
@@ -423,12 +429,25 @@ def compose(space=None, task=None, policy: Optional[SelectionPolicy] = None,
         from repro.sim.rerank import simulate_report   # runtime: no cycle
         return simulate_report(report, sim_policy=sim_policy, cache=cache)
 
+    compose_span = obs.span("hetero.compose", task=str(task.task_id),
+                            objective=cp.objective)
+    with compose_span:
+        return _compose_inner(table, task, policy, cp, cache, sharded,
+                              robust, _refine, compose_span)
+
+
+def _compose_inner(table, task, policy, cp, cache, sharded, robust,
+                   _refine, sp) -> CompositionReport:
     if cache is not None:
         from repro.hetero import cache as cache_mod
         hit = cache_mod.load_report(cache, table, task, policy, cp,
                                     robust=robust)
         if hit is not None:
+            _C_CACHE_HIT.inc()
+            sp.set(cache="hit")
             return _refine(hit)
+        _C_CACHE_MISS.inc()
+        sp.set(cache="miss")
 
     metrics = table.robust_metrics(robust)
     fam_col = table.families
@@ -457,15 +476,20 @@ def compose(space=None, task=None, policy: Optional[SelectionPolicy] = None,
               or (cp.search == "auto" and n_space > cp.search_threshold))
     norms = balanced_norms(slots, metrics) \
         if cp.objective == "balanced" else None
-    if use_bb:
-        idx, pos, rank_sum, scores, truncated, _ = branch_and_bound(
-            slots, metrics, cap_bits, f_req, cp.objective, budget,
-            top_k=cp.top_k, max_nodes=cp.max_compositions,
-            batch=cp.search_batch, sharded=sharded)
-    else:
-        idx, pos, rank_sum, truncated = _composition_grid(
-            slots, cp.max_compositions)
-        scores = score_grid(metrics, idx, cap_bits, f_req, sharded=sharded)
+    with obs.span("hetero.search",
+                  search=("branch_and_bound" if use_bb else "exhaustive"),
+                  n_space=int(n_space)) as search_span:
+        if use_bb:
+            idx, pos, rank_sum, scores, truncated, _ = branch_and_bound(
+                slots, metrics, cap_bits, f_req, cp.objective, budget,
+                top_k=cp.top_k, max_nodes=cp.max_compositions,
+                batch=cp.search_batch, sharded=sharded)
+        else:
+            idx, pos, rank_sum, truncated = _composition_grid(
+                slots, cp.max_compositions)
+            scores = score_grid(metrics, idx, cap_bits, f_req,
+                                sharded=sharded)
+        search_span.set(n_scored=int(idx.shape[0]))
     truncated = truncated or any(bc.capped for bc in slots)
 
     feasible = np.all(idx >= 0, axis=1) & budget.feasible(scores)

@@ -38,12 +38,20 @@ cheaper than the heap walk.
 from __future__ import annotations
 
 import heapq
+import math
 from typing import Dict, List, Mapping, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.hetero.candidates import BucketCandidates
 from repro.hetero.system import SYSTEM_METRICS, SystemBudget, score_grid
+
+# search statistics (repro.obs registry): nodes actually scored, fixed-shape
+# batches flushed, and compositions the bound proof never had to score
+_C_NODES = obs.counter("hetero.search_nodes")
+_C_BATCHES = obs.counter("hetero.search_batches")
+_C_PRUNED = obs.counter("hetero.search_pruned")
 
 # relative slack on the branch-and-bound cutoff: the float64 bound of a
 # composition and its float32 kernel score agree to ~1e-6 relative per slot;
@@ -184,6 +192,7 @@ def branch_and_bound(slots: Sequence[BucketCandidates],
         idx_np[n:] = idx_np[0]          # pad to the fixed batch shape so the
         #                                 jit kernel compiles exactly once
         scores = score_grid(metrics, idx_np, cap_bits, f_req, sharded=sharded)
+        _C_BATCHES.inc()
         feas = np.all(idx_np[:n] >= 0, axis=1) & budget.feasible(
             {m: scores[m][:n] for m in SYSTEM_METRICS})
         for j in np.where(feas)[0]:
@@ -220,6 +229,8 @@ def branch_and_bound(slots: Sequence[BucketCandidates],
             flush()
     flush()
 
+    _C_NODES.inc(n_scored)
+    _C_PRUNED.inc(max(math.prod(len(c) for c in lists) - n_scored, 0))
     idx = np.concatenate(out_idx) if out_idx else \
         np.empty((0, n_slots), np.int32)
     pos = np.concatenate(out_pos) if out_pos else \

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.kernels import backend
 from repro.parallel.grid import shard2d, shard_leading
 
@@ -92,13 +93,15 @@ class SystemBudget:
 
 # how many batched composition evaluations this process has run (a compose()
 # cache hit leaves the counter unchanged — tests use it the same way they use
-# api.characterize_call_count for the DesignTable cache)
-_eval_calls = 0
+# api.characterize_call_count for the DesignTable cache); lives on the
+# repro.obs metrics registry, read through the thin alias below
+_C_EVALS = obs.counter("hetero.compose_evals")
 
 
 def composition_eval_count() -> int:
-    """Number of batched composition scoring sweeps executed so far."""
-    return _eval_calls
+    """Number of batched composition scoring sweeps executed so far
+    (backed by the ``hetero.compose_evals`` obs counter)."""
+    return _C_EVALS.value
 
 
 def score_kernel(idx: jnp.ndarray, cols: Dict[str, jnp.ndarray],
@@ -232,23 +235,25 @@ def score_grid(metrics: Mapping[str, np.ndarray], idx: np.ndarray,
     plain jit call with identical results. Returns numpy ``(J,)`` arrays
     keyed by SYSTEM_METRICS.
     """
-    global _eval_calls
     cols = {k: jnp.asarray(np.asarray(metrics[k]), jnp.float32)
             for k in METRIC_COLS}
     idx_dev = jnp.asarray(np.asarray(idx), jnp.int32)
     slot_cap_bits = jnp.asarray(np.asarray(cap_bits), jnp.float32)
     slot_f_req_hz = jnp.asarray(np.asarray(f_req), jnp.float32)
     from repro.analysis import sanitize
-    if sharded:
-        # shard_map composes badly with checkify's error plumbing; the
-        # sanitizer covers the single-device path, which computes the same
-        # values
-        out = shard_leading(_score_jit, idx_dev, cols, slot_cap_bits,
-                            slot_f_req_hz, devices=devices)
-    else:
-        out = sanitize.maybe_wrap(_score_jit)(
-            idx_dev, cols, slot_cap_bits, slot_f_req_hz)
-    _eval_calls += 1
+    with obs.span("hetero.score", probe=_score_jit,
+                  J=int(idx_dev.shape[0]), S=int(idx_dev.shape[1]),
+                  sharded=sharded):
+        if sharded:
+            # shard_map composes badly with checkify's error plumbing; the
+            # sanitizer covers the single-device path, which computes the same
+            # values
+            out = shard_leading(_score_jit, idx_dev, cols, slot_cap_bits,
+                                slot_f_req_hz, devices=devices)
+        else:
+            out = sanitize.maybe_wrap(_score_jit)(
+                idx_dev, cols, slot_cap_bits, slot_f_req_hz)
+    _C_EVALS.inc()
     return {k: np.asarray(v) for k, v in out.items()}
 
 
@@ -266,7 +271,6 @@ def score_grid_corners(corner_metrics: Sequence[Mapping[str, np.ndarray]],
     to the single-device path. Returns ``(C, J)`` numpy arrays keyed by
     SYSTEM_METRICS.
     """
-    global _eval_calls
     cols = {k: jnp.asarray(np.stack([np.asarray(m[k])
                                      for m in corner_metrics]), jnp.float32)
             for k in METRIC_COLS}
@@ -274,13 +278,16 @@ def score_grid_corners(corner_metrics: Sequence[Mapping[str, np.ndarray]],
     slot_cap_bits = jnp.asarray(np.asarray(cap_bits), jnp.float32)
     slot_f_req_hz = jnp.asarray(np.asarray(f_req), jnp.float32)
     from repro.analysis import sanitize
-    if sharded:
-        # same caveat as score_grid: shard_map composes badly with checkify,
-        # and the single-device path computes identical values
-        out = shard2d(_score_corners_jit, idx_dev, cols, slot_cap_bits,
-                      slot_f_req_hz, devices=devices)
-    else:
-        out = sanitize.maybe_wrap(_score_corners_jit)(
-            idx_dev, cols, slot_cap_bits, slot_f_req_hz)
-    _eval_calls += 1
+    with obs.span("hetero.score", probe=_score_corners_jit,
+                  J=int(idx_dev.shape[0]), S=int(idx_dev.shape[1]),
+                  corners=len(corner_metrics), sharded=sharded):
+        if sharded:
+            # same caveat as score_grid: shard_map composes badly with
+            # checkify, and the single-device path computes identical values
+            out = shard2d(_score_corners_jit, idx_dev, cols, slot_cap_bits,
+                          slot_f_req_hz, devices=devices)
+        else:
+            out = sanitize.maybe_wrap(_score_corners_jit)(
+                idx_dev, cols, slot_cap_bits, slot_f_req_hz)
+    _C_EVALS.inc()
     return {k: np.asarray(v) for k, v in out.items()}

@@ -107,11 +107,14 @@ def get_impl(name: str, backend: Optional[str] = None) -> Callable:
     if impls is None:
         raise KeyError(f"no kernel registered under {name!r}; "
                        f"registered: {registered()}")
-    for candidate in _FALLBACK[resolve_backend(backend)]:
+    resolved = resolve_backend(backend)
+    for candidate in _FALLBACK[resolved]:
         if candidate in impls:
+            from repro import obs                # lazy: kernels load early
+            obs.counter(f"kernels.dispatch.{name}.{candidate}").inc()
             return impls[candidate]
     raise KeyError(f"op {name!r} has no implementation for backend "
-                   f"{resolve_backend(backend)!r} and no xla fallback")
+                   f"{resolved!r} and no xla fallback")
 
 
 def dispatch(name: str, *args, backend: Optional[str] = None, **kwargs):

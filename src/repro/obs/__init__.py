@@ -1,0 +1,27 @@
+"""repro.obs — structured tracing + metrics for the DSE pipeline.
+
+Two halves (see docs/OBSERVABILITY.md for the catalog and contracts):
+
+- ``trace``: gated context-manager spans (``REPRO_TRACE=out.json`` /
+  ``Compiler(telemetry=True)`` / ``enabled_scope``). Off by default and
+  provably free: no events, no timestamps, bit-identical numerics.
+- ``metrics``: always-on counters/gauges/histograms — the registry the
+  cache-proof counters (characterize/compose/sim eval counts) live on.
+
+Stdlib-only: importing or using repro.obs can never add a jax dependency,
+a jit site, or a trace-cache entry to the instrumented hot paths.
+"""
+from repro.obs.metrics import (  # noqa: F401
+    REGISTRY, Counter, Gauge, Histogram, Registry, counter, gauge,
+    histogram, snapshot, value,
+)
+from repro.obs.trace import (  # noqa: F401
+    clear, disable, enable, enabled, enabled_scope, events, span, write,
+)
+
+__all__ = [
+    "span", "enabled", "enable", "disable", "enabled_scope",
+    "events", "clear", "write",
+    "counter", "gauge", "histogram", "value", "snapshot",
+    "REGISTRY", "Registry", "Counter", "Gauge", "Histogram",
+]

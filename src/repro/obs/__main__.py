@@ -1,0 +1,26 @@
+"""CLI: ``python -m repro.obs report trace.json`` → stage-time table."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.obs import report as report_mod
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="repro.obs trace tooling (see docs/OBSERVABILITY.md)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    p_report = sub.add_parser(
+        "report", help="render a stage-time/counter table from a trace file")
+    p_report.add_argument("trace", help="trace file (.json Chrome format "
+                                        "or .jsonl event log)")
+    args = ap.parse_args(argv)
+    if args.cmd == "report":
+        print(report_mod.render_file(args.trace))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

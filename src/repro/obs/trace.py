@@ -1,0 +1,207 @@
+"""Zero-dependency span tracer: wall-clock spans with jit-compile deltas.
+
+``span("hetero.score", probe=_score_jit, J=4096)`` is a context manager
+that records one trace event — name, category, start timestamp and
+duration [µs], nesting depth, thread id, and arbitrary JSON-serializable
+``args``. When tracing is *disabled* (the default) ``span()`` returns a
+shared no-op singleton: no allocation, no timestamp read, no lock — the
+instrumented hot paths pay one module-global boolean check.
+
+Contract highlights (docs/OBSERVABILITY.md spells out the full catalog):
+
+- **exception safety**: a span body that raises still closes its event
+  (the exception type lands in ``args["error"]``) and the exception
+  propagates unchanged — tracing never swallows errors.
+- **compile-vs-execute split**: pass ``probe=<jitted fn>`` and the span
+  diffs the function's ``_cache_size()`` across its body; a nonzero delta
+  lands in ``args["new_traces"]``, so a trace shows exactly which call
+  paid a compilation. The probe is read, never wrapped — the jit cache
+  key and trace count of the probed function are untouched.
+- **nesting**: per-thread depth is recorded on every event, so exporters
+  can reconstruct the span tree without parent pointers.
+- **activation**: ``REPRO_TRACE=out.json`` in the environment enables
+  tracing at import and writes the Chrome-trace file at process exit;
+  ``enabled_scope(True)`` / ``enable()`` do the same programmatically
+  (``repro.api.Compiler(telemetry=True)`` wraps its calls in a scope).
+
+Everything here is stdlib-only: no jax, no numpy — the tracer itself can
+never add a jit trace-cache entry (RC budgets) or touch numerics.
+"""
+from __future__ import annotations
+
+import atexit
+import os
+import threading
+import time
+from contextlib import contextmanager
+from typing import Dict, List, Optional
+
+# process epoch: event timestamps are µs since this module was imported
+_T0 = time.perf_counter()
+
+_lock = threading.Lock()
+_events: List[Dict[str, object]] = []
+_enabled = False
+_out_path: Optional[str] = None
+_tls = threading.local()
+
+
+def enabled() -> bool:
+    """Is span recording currently on?"""
+    return _enabled
+
+
+def enable(path: Optional[str] = None) -> None:
+    """Turn span recording on; ``path`` (optional) is where ``write()`` /
+    the atexit flush will put the Chrome-trace file."""
+    global _enabled, _out_path
+    if path is not None:
+        _out_path = str(path)
+    _enabled = True
+
+
+def disable() -> None:
+    """Turn span recording off (already-recorded events are kept)."""
+    global _enabled
+    _enabled = False
+
+
+@contextmanager
+def enabled_scope(on: bool = True):
+    """Force tracing on (or off) inside the block, restoring the previous
+    state on exit — the scope ``Compiler(telemetry=True)`` uses."""
+    global _enabled
+    prev = _enabled
+    _enabled = bool(on)
+    try:
+        yield
+    finally:
+        _enabled = prev
+
+
+def _probe_size(probe) -> Optional[int]:
+    """Trace-cache size of a jitted callable, via the same ``_cache_size()``
+    API the RC analyzer budgets; None when the probe has no such API."""
+    size = getattr(probe, "_cache_size", None)
+    if callable(size):
+        try:
+            return int(size())
+        except Exception:
+            return None
+    return None
+
+
+class _NullSpan:
+    """Shared do-nothing span returned while tracing is disabled."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def set(self, **kw):
+        return self
+
+
+_NULL = _NullSpan()
+
+
+class Span:
+    """One live span (use via ``span(...)``, not directly)."""
+    __slots__ = ("name", "cat", "args", "_probe", "_t0", "_cache0", "_depth")
+
+    def __init__(self, name: str, cat: str, probe, args: Dict[str, object]):
+        self.name = name
+        self.cat = cat
+        self.args = args
+        self._probe = probe
+
+    def set(self, **kw):
+        """Attach extra args mid-span (e.g. results known only at the end)."""
+        self.args.update(kw)
+        return self
+
+    def __enter__(self):
+        self._depth = getattr(_tls, "depth", 0)
+        _tls.depth = self._depth + 1
+        self._cache0 = _probe_size(self._probe) \
+            if self._probe is not None else None
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        t1 = time.perf_counter()
+        _tls.depth = self._depth
+        args = dict(self.args)
+        if self._cache0 is not None:
+            c1 = _probe_size(self._probe)
+            if c1 is not None and c1 != self._cache0:
+                args["new_traces"] = c1 - self._cache0
+        if exc_type is not None:
+            args["error"] = exc_type.__name__
+        event = {
+            "name": self.name,
+            "cat": self.cat,
+            "ph": "X",
+            "ts": (self._t0 - _T0) * 1e6,       # µs since process epoch
+            "dur": (t1 - self._t0) * 1e6,       # µs
+            "tid": threading.get_ident() & 0xFFFFFFFF,
+            "depth": self._depth,
+            "args": args,
+        }
+        with _lock:
+            _events.append(event)
+        return False                             # never swallow the exception
+
+
+def span(name: str, cat: str = "repro", probe=None, **args):
+    """Context manager recording one trace event (no-op when disabled).
+
+    ``probe``: optional jitted callable whose ``_cache_size()`` delta across
+    the span body is reported as ``args["new_traces"]``.
+    """
+    if not _enabled:
+        return _NULL
+    return Span(name, cat, probe, args)
+
+
+def events() -> List[Dict[str, object]]:
+    """Snapshot (copy) of every recorded event so far."""
+    with _lock:
+        return list(_events)
+
+
+def clear() -> None:
+    """Drop all recorded events (the enabled flag is untouched)."""
+    with _lock:
+        _events.clear()
+
+
+def write(path: Optional[str] = None) -> Optional[str]:
+    """Flush recorded events + the metrics snapshot to ``path`` (or the
+    ``REPRO_TRACE``/``enable(path=...)`` destination). Format by suffix:
+    ``.jsonl`` → JSON-lines, anything else → Chrome trace-event JSON.
+    Returns the path written, or None if there was nowhere to write."""
+    from repro.obs import export, metrics
+    dest = path or _out_path
+    if dest is None:
+        return None
+    export.write(dest, events(), metrics.REGISTRY.snapshot())
+    return dest
+
+
+def _flush_at_exit() -> None:
+    if _out_path is not None and (_events or _enabled):
+        try:
+            write()
+        except Exception:                        # never break interpreter exit
+            pass
+
+
+atexit.register(_flush_at_exit)
+
+_env_path = os.environ.get("REPRO_TRACE")
+if _env_path:
+    enable(_env_path)

@@ -23,10 +23,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.compat import make_mesh, shard_map
 
 GRID_AXIS = "grid"
 CORNER_AXIS = "corner"
+
+# multi-device dispatches (repro.obs registry); single-device calls take the
+# plain-call fast path and are deliberately not counted as "sharded"
+_C_SHARD = obs.counter("parallel.shard_calls")
 
 
 def pad_to_multiple(x, multiple: int):
@@ -59,14 +64,16 @@ def shard_leading(fn, x, *rest, devices: Optional[Sequence] = None,
     n_dev = len(devs)
     if n_dev <= 1:
         return fn(x, *rest)
-    mesh = make_mesh((n_dev,), (axis_name,), devices=devs)
-    xp, n = pad_to_multiple(jnp.asarray(x), n_dev)
-    sharded = shard_map(
-        fn, mesh=mesh,
-        in_specs=(P(axis_name),) + (P(),) * len(rest),
-        out_specs=P(axis_name), check_rep=False)
-    out = sharded(xp, *rest)
-    return jax.tree.map(lambda leaf: leaf[:n], out)
+    with obs.span("parallel.shard", mesh="1d", n_dev=n_dev):
+        _C_SHARD.inc()
+        mesh = make_mesh((n_dev,), (axis_name,), devices=devs)
+        xp, n = pad_to_multiple(jnp.asarray(x), n_dev)
+        sharded = shard_map(
+            fn, mesh=mesh,
+            in_specs=(P(axis_name),) + (P(),) * len(rest),
+            out_specs=P(axis_name), check_rep=False)
+        out = sharded(xp, *rest)
+        return jax.tree.map(lambda leaf: leaf[:n], out)
 
 
 def _factor_devices(n_dev: int, minor_n: int) -> Tuple[int, int]:
@@ -101,18 +108,20 @@ def shard2d(fn, x, y, *rest, devices: Optional[Sequence] = None,
     n_dev = len(devs)
     if n_dev <= 1:
         return fn(x, y, *rest)
-    n_x = jax.tree.leaves(x)[0].shape[0]
-    n_y = jax.tree.leaves(y)[0].shape[0]
-    ways_x, ways_y = _factor_devices(n_dev, n_y)
-    ax_x, ax_y = axis_names
-    mesh = make_mesh((ways_x, ways_y), (ax_x, ax_y), devices=devs)
-    xp = jax.tree.map(
-        lambda leaf: pad_to_multiple(jnp.asarray(leaf), ways_x)[0], x)
-    yp = jax.tree.map(
-        lambda leaf: pad_to_multiple(jnp.asarray(leaf), ways_y)[0], y)
-    sharded = shard_map(
-        fn, mesh=mesh,
-        in_specs=(P(ax_x), P(ax_y)) + (P(),) * len(rest),
-        out_specs=P(ax_y, ax_x), check_rep=False)
-    out = sharded(xp, yp, *rest)
-    return jax.tree.map(lambda leaf: leaf[:n_y, :n_x], out)
+    with obs.span("parallel.shard", mesh="2d", n_dev=n_dev):
+        _C_SHARD.inc()
+        n_x = jax.tree.leaves(x)[0].shape[0]
+        n_y = jax.tree.leaves(y)[0].shape[0]
+        ways_x, ways_y = _factor_devices(n_dev, n_y)
+        ax_x, ax_y = axis_names
+        mesh = make_mesh((ways_x, ways_y), (ax_x, ax_y), devices=devs)
+        xp = jax.tree.map(
+            lambda leaf: pad_to_multiple(jnp.asarray(leaf), ways_x)[0], x)
+        yp = jax.tree.map(
+            lambda leaf: pad_to_multiple(jnp.asarray(leaf), ways_y)[0], y)
+        sharded = shard_map(
+            fn, mesh=mesh,
+            in_specs=(P(ax_x), P(ax_y)) + (P(),) * len(rest),
+            out_specs=P(ax_y, ax_x), check_rep=False)
+        out = sharded(xp, yp, *rest)
+        return jax.tree.map(lambda leaf: leaf[:n_y, :n_x], out)

@@ -6,13 +6,22 @@ serving loop used by examples/serve_lm.py.
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import LM
+
+# per-step serving telemetry (repro.obs): dispatch counts always, wall-time
+# histograms [s] + spans when tracing is enabled
+_C_PREFILL = obs.counter("serve.prefill_calls")
+_C_DECODE = obs.counter("serve.decode_steps")
+_H_PREFILL_S = obs.histogram("serve.prefill_s")
+_H_DECODE_S = obs.histogram("serve.decode_step_s")
 
 
 def make_prefill_step(cfg, max_seq: Optional[int] = None):
@@ -57,19 +66,28 @@ class Engine:
 
     def generate(self, batch: Dict[str, Any], steps: int, temperature=None,
                  seed=0):
-        cache, logits = self._prefill(self.params, batch)
+        t0 = time.perf_counter()
+        with obs.span("serve.prefill", probe=self._prefill,
+                      batch=int(jax.tree.leaves(batch)[0].shape[0])):
+            cache, logits = self._prefill(self.params, batch)
+        _C_PREFILL.inc()
+        _H_PREFILL_S.observe(time.perf_counter() - t0)
         key = jax.random.key(seed)
         outs = []
         cond = batch.get("cond")
-        for _ in range(steps):
-            if temperature is None:
-                tok = sample_greedy(logits)
-            else:
-                key, sk = jax.random.split(key)
-                tok = sample_temperature(sk, logits, temperature)
-            outs.append(np.asarray(tok))
-            dec_batch = {"tokens": tok}
-            if cond is not None:
-                dec_batch["cond"] = cond
-            logits, cache = self._decode(self.params, cache, dec_batch)
+        for i in range(steps):
+            t0 = time.perf_counter()
+            with obs.span("serve.decode_step", probe=self._decode, step=i):
+                if temperature is None:
+                    tok = sample_greedy(logits)
+                else:
+                    key, sk = jax.random.split(key)
+                    tok = sample_temperature(sk, logits, temperature)
+                outs.append(np.asarray(tok))
+                dec_batch = {"tokens": tok}
+                if cond is not None:
+                    dec_batch["cond"] = cond
+                logits, cache = self._decode(self.params, cache, dec_batch)
+            _C_DECODE.inc()
+            _H_DECODE_S.observe(time.perf_counter() - t0)
         return np.stack(outs, axis=1)  # (B, steps[, nq])

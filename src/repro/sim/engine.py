@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.kernels import backend as _backend
 from repro.sim import refresh as refresh_mod
 from repro.sim.trace import Trace
@@ -59,13 +60,15 @@ SIM_METRICS = ("e_dyn_j", "e_refresh_j", "e_rewrite_j", "e_leak_j",
 
 # how many batched trace replays this process has run (a cached
 # simulate/rerank leaves it unchanged — same proof pattern as
-# api.characterize_call_count / hetero.composition_eval_count)
-_sim_calls = 0
+# api.characterize_call_count / hetero.composition_eval_count); lives on
+# the repro.obs metrics registry, read through the thin alias below
+_C_REPLAYS = obs.counter("sim.replay_calls")
 
 
 def sim_eval_count() -> int:
-    """Number of batched trace-replay sweeps executed so far."""
-    return _sim_calls
+    """Number of batched trace-replay sweeps executed so far
+    (backed by the ``sim.replay_calls`` obs counter)."""
+    return _C_REPLAYS.value
 
 
 @dataclass(frozen=True)
@@ -245,7 +248,6 @@ def simulate_traces(cols: Mapping[str, np.ndarray], idx: np.ndarray,
     times, and collisions summed across phases, peaks maxed — plus
     ``"phases"``: the same per-phase dicts keyed by phase name.
     """
-    global _sim_calls
     if not traces:
         raise ValueError("simulate_traces() needs at least one Trace")
     policy = policy or SimPolicy()
@@ -265,15 +267,19 @@ def simulate_traces(cols: Mapping[str, np.ndarray], idx: np.ndarray,
 
     per_phase: Dict[str, Dict[str, np.ndarray]] = {}
     bad = np.any(idx < 0, axis=1)
-    for tr in traces:
-        xs = (jnp.asarray(tr.t_bin_s, jnp.float32),
-              jnp.asarray(tr.reads.T, jnp.float32),
-              jnp.asarray(tr.write_bits.T, jnp.float32),
-              jnp.asarray(tr.occupancy.T, jnp.float32))
-        out = impl(params, slot, xs, consts)
-        per_phase[tr.phase] = _mask_sentinels(
-            {m: np.asarray(out[m], np.float64) for m in SIM_METRICS}, bad)
-    _sim_calls += 1
+    with obs.span("sim.replay", J=int(idx.shape[0]), S=int(S),
+                  phases=len(traces)):
+        for tr in traces:
+            xs = (jnp.asarray(tr.t_bin_s, jnp.float32),
+                  jnp.asarray(tr.reads.T, jnp.float32),
+                  jnp.asarray(tr.write_bits.T, jnp.float32),
+                  jnp.asarray(tr.occupancy.T, jnp.float32))
+            with obs.span("sim.replay_phase", probe=_sim_grid_xla,
+                          phase=tr.phase):
+                out = impl(params, slot, xs, consts)
+            per_phase[tr.phase] = _mask_sentinels(
+                {m: np.asarray(out[m], np.float64) for m in SIM_METRICS}, bad)
+    _C_REPLAYS.inc()
 
     combined = _mask_sentinels(_combine_phases(per_phase), bad)
     combined["phases"] = per_phase

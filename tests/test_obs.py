@@ -1,0 +1,418 @@
+"""repro.obs: tracer / metrics / export / report contracts, the hot-path
+instrumentation, and the benchmark perf-compare.
+
+The two non-negotiable guarantees proven here:
+
+- **telemetry off is free**: compose results are bit-identical with tracing
+  on vs off, and re-driving a warm jit site under an enabled scope adds
+  zero trace-cache entries (the probe is read, never wrapped).
+- **the catalog is the surface**: every span/metric name the pipeline emits
+  is covered by ``repro.obs.catalog`` (and DC04 forces the docs to match).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from benchmarks import compare
+from repro import obs
+from repro.api import (Compiler, DesignTable, characterize_call_count,
+                       design_space)
+from repro.core import gainsight
+from repro.hetero import ComposePolicy, compose, composition_eval_count
+from repro.kernels import backend as kbackend
+from repro.obs import catalog, export
+from repro.obs import report as obs_report
+from repro.sim.engine import sim_eval_count
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+@pytest.fixture(autouse=True)
+def _clean_trace():
+    """Every test starts with an empty event list and tracing off."""
+    obs.disable()
+    obs.clear()
+    yield
+    obs.disable()
+    obs.clear()
+
+
+@pytest.fixture(scope="module")
+def table():
+    return DesignTable.from_configs(design_space())
+
+
+# ------------------------------------------------------------------ tracer
+def test_span_nesting_depth_and_timing():
+    with obs.enabled_scope(True):
+        with obs.span("t.outer"):
+            with obs.span("t.mid"):
+                with obs.span("t.inner"):
+                    pass
+            with obs.span("t.mid2"):
+                pass
+    ev = {e["name"]: e for e in obs.events()}
+    assert set(ev) == {"t.outer", "t.mid", "t.inner", "t.mid2"}
+    assert ev["t.outer"]["depth"] == 0
+    assert ev["t.mid"]["depth"] == ev["t.mid2"]["depth"] == 1
+    assert ev["t.inner"]["depth"] == 2
+    # children are contained in the parent's [ts, ts+dur] window
+    o = ev["t.outer"]
+    for child in ("t.mid", "t.inner", "t.mid2"):
+        c = ev[child]
+        assert o["ts"] <= c["ts"]
+        assert c["ts"] + c["dur"] <= o["ts"] + o["dur"] + 1e-6
+    assert all(e["ph"] == "X" and e["dur"] >= 0 for e in obs.events())
+
+
+def test_span_exception_closes_and_propagates():
+    with obs.enabled_scope(True):
+        with pytest.raises(ValueError, match="boom"):
+            with obs.span("t.fail"):
+                raise ValueError("boom")
+        with obs.span("t.after"):
+            pass
+    ev = {e["name"]: e for e in obs.events()}
+    assert ev["t.fail"]["args"]["error"] == "ValueError"
+    # the failed span restored nesting depth for its successors
+    assert ev["t.after"]["depth"] == 0
+    assert "error" not in ev["t.after"]["args"]
+
+
+def test_disabled_span_is_shared_noop_and_emits_nothing():
+    assert not obs.enabled()
+    s1, s2 = obs.span("t.a"), obs.span("t.b", k=1)
+    assert s1 is s2                       # one shared null singleton
+    with s1:
+        s1.set(ignored=True)
+    assert obs.events() == []
+
+
+def test_span_set_lands_in_args():
+    with obs.enabled_scope(True):
+        with obs.span("t.s", static=1) as sp:
+            sp.set(dynamic=2)
+    (e,) = obs.events()
+    assert e["args"]["static"] == 1 and e["args"]["dynamic"] == 2
+
+
+# ----------------------------------------------------------------- metrics
+def test_metrics_registry_shapes():
+    c = obs.counter("t.count")
+    assert obs.counter("t.count") is c    # get-or-create returns same object
+    c.inc()
+    c.inc(4)
+    obs.gauge("t.level").set(2.5)
+    h = obs.histogram("t.lat_s")
+    for v in (0.1, 0.3, 0.2):
+        h.observe(v)
+    snap = obs.snapshot()
+    assert snap["counters"]["t.count"] == 5
+    assert obs.value("t.count") == 5
+    assert snap["gauges"]["t.level"] == 2.5
+    hs = snap["histograms"]["t.lat_s"]
+    assert hs["count"] == 3 and hs["min"] == 0.1 and hs["max"] == 0.3
+    assert hs["mean"] == pytest.approx(0.2)
+    obs.REGISTRY.reset()
+    snap = obs.snapshot()
+    assert snap["counters"]["t.count"] == 0          # names survive a reset
+    assert snap["histograms"]["t.lat_s"]["count"] == 0
+
+
+# ------------------------------------------------------------------ export
+@pytest.mark.parametrize("suffix", [".json", ".jsonl"])
+def test_export_roundtrip(tmp_path, suffix):
+    with obs.enabled_scope(True):
+        with obs.span("t.a", k="v"):
+            with obs.span("t.b"):
+                pass
+    n0 = obs.value("t.rt_count")
+    obs.counter("t.rt_count").inc(3)
+    path = tmp_path / f"trace{suffix}"
+    export.write(path, obs.events(), obs.snapshot())
+    events, metrics = export.read(path)
+    assert len(events) == len(obs.events())
+    for got, want in zip(events, obs.events()):
+        assert set(got) == set(want)
+        for k in ("name", "cat", "ph", "tid", "depth", "args"):
+            assert got[k] == want[k]
+        for k in ("ts", "dur"):                # writer rounds to 1 ns
+            assert got[k] == pytest.approx(want[k], abs=1e-3)
+    assert metrics["counters"]["t.rt_count"] == n0 + 3
+
+
+def test_chrome_trace_is_perfetto_shaped(tmp_path):
+    with obs.enabled_scope(True):
+        with obs.span("t.x"):
+            pass
+    obs.counter("t.ctr").inc()
+    path = tmp_path / "trace.json"
+    export.write_chrome(path, obs.events(), obs.snapshot())
+    doc = json.loads(path.read_text())
+    assert doc["otherData"]["schema"] == export.SCHEMA_VERSION
+    phases = {e["ph"] for e in doc["traceEvents"]}
+    assert phases == {"X", "C"}
+    x = next(e for e in doc["traceEvents"] if e["ph"] == "X")
+    assert {"name", "cat", "ts", "dur", "pid", "tid"} <= set(x)
+    c = next(e for e in doc["traceEvents"]
+             if e["ph"] == "C" and e["name"] == "t.ctr")
+    assert c["args"]["value"] == 1
+
+
+def test_report_render(tmp_path):
+    with obs.enabled_scope(True):
+        with obs.span("t.render_me"):
+            pass
+    obs.counter("t.render_count").inc(7)
+    text = obs_report.render(obs.events(), obs.snapshot())
+    assert "t.render_me" in text and "t.render_count" in text
+    path = tmp_path / "trace.json"
+    obs.write(path)
+    assert "t.render_me" in obs_report.render_file(path)
+
+
+def test_report_cli_module(tmp_path):
+    with obs.enabled_scope(True):
+        with obs.span("t.cli"):
+            pass
+    path = tmp_path / "trace.json"
+    obs.write(path)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.obs", "report", str(path)],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": str(SRC)})
+    assert out.returncode == 0, out.stderr
+    assert "t.cli" in out.stdout
+
+
+def test_env_var_enables_and_atexit_flushes(tmp_path):
+    path = tmp_path / "envtrace.json"
+    code = ("import repro.obs as obs\n"
+            "assert obs.enabled()\n"
+            "with obs.span('t.env'):\n"
+            "    pass\n")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": str(SRC),
+             "REPRO_TRACE": str(path)})
+    assert out.returncode == 0, out.stderr
+    events, _ = export.read(path)
+    assert [e["name"] for e in events] == ["t.env"]
+
+
+# ----------------------------------------------- counter-backed public API
+def test_counter_migration_backs_public_counts(table):
+    t = gainsight.TASKS[0]
+    c0, s0 = composition_eval_count(), sim_eval_count()
+    compose(table, t, refine="simulate")
+    assert composition_eval_count() > c0       # scoring sweep counted
+    assert sim_eval_count() == s0 + 1          # one replay sweep
+    assert obs.value("hetero.compose_evals") == composition_eval_count()
+    assert obs.value("sim.replay_calls") == sim_eval_count()
+    k0 = characterize_call_count()
+    DesignTable.from_configs(design_space()[:2])
+    assert characterize_call_count() == k0 + 1
+    assert obs.value("api.characterize_calls") == characterize_call_count()
+
+
+# --------------------------------------------------- off-is-free contracts
+def test_bit_identical_with_telemetry_on(table):
+    t = gainsight.TASKS[1]
+    ref = compose(table, t)
+    with obs.enabled_scope(True):
+        traced = compose(table, t)
+    assert obs.events()                        # tracing actually happened
+    assert traced.labels() == ref.labels()
+    for a, b in zip(ref.ranked, traced.ranked):
+        assert set(a.metrics) == set(b.metrics)
+        for k in a.metrics:
+            assert a.metrics[k] == b.metrics[k], k   # bit-exact, no tol
+
+
+def test_no_retrace_under_enabled_scope(table):
+    from repro.hetero import system
+
+    t = gainsight.TASKS[2]
+    compose(table, t)                          # warm the score jit
+    n0 = system._score_jit._cache_size()
+    with obs.enabled_scope(True):
+        compose(table, t)
+    assert system._score_jit._cache_size() == n0
+    score_spans = [e for e in obs.events() if e["name"] == "hetero.score"]
+    assert score_spans
+    assert all("new_traces" not in e["args"] for e in score_spans)
+
+
+# ------------------------------------------------- end-to-end acceptance
+def test_trace_of_compose_simulate_run(table, tmp_path):
+    """One compose(refine="simulate") under tracing yields a Perfetto-shaped
+    trace holding characterize/score/search/replay spans plus cache-hit and
+    B&B-pruning counters (the ISSUE acceptance criterion)."""
+    t = gainsight.TASKS[0]
+    hit0 = obs.value("hetero.cache_hits")
+    miss0 = obs.value("hetero.cache_misses")
+    nodes0 = obs.value("hetero.search_nodes")
+    pruned0 = obs.value("hetero.search_pruned")
+    cp = ComposePolicy(search="branch_and_bound")
+    with obs.enabled_scope(True):
+        small = DesignTable.from_configs(design_space())
+        compose(small, t, compose_policy=cp, cache=tmp_path,
+                refine="simulate")
+        compose(small, t, compose_policy=cp, cache=tmp_path,
+                refine="simulate")             # second call: report-cache hit
+        path = tmp_path / "trace.json"
+        obs.write(path)
+
+    names = {e["name"] for e in obs.events()}
+    assert {"api.characterize", "hetero.compose", "hetero.search",
+            "hetero.score", "sim.replay", "sim.rerank"} <= names
+    assert obs.value("hetero.cache_misses") == miss0 + 1
+    assert obs.value("hetero.cache_hits") == hit0 + 1
+    assert obs.value("hetero.search_nodes") > nodes0       # B&B ran
+    assert obs.value("hetero.search_pruned") >= pruned0
+    hits = [e for e in obs.events()
+            if e["name"] == "hetero.compose" and
+            e["args"].get("cache") == "hit"]
+    assert len(hits) == 1
+
+    doc = json.loads(path.read_text())         # Perfetto-loadable shape
+    ctrs = doc["otherData"]["metrics"]["counters"]
+    assert "hetero.cache_hits" in ctrs and "hetero.search_pruned" in ctrs
+    assert {e["name"] for e in doc["traceEvents"] if e["ph"] == "C"} >= {
+        "hetero.cache_hits", "hetero.search_pruned"}
+
+
+def test_compiler_telemetry_flag(table):
+    t = gainsight.TASKS[0]
+    Compiler().compose(t, space=table)
+    assert obs.events() == []                  # default: off
+    Compiler(telemetry=True).compose(t, space=table)
+    assert {e["name"] for e in obs.events()} >= {"hetero.compose",
+                                                 "hetero.search"}
+    assert not obs.enabled()                   # scope-local, not sticky
+
+
+def test_serve_engine_prefill_decode_spans():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduce_config
+    from repro.serve.engine import Engine, make_prefill_step
+
+    cfg = reduce_config(get_config("internlm2-1.8b")).replace(num_layers=1)
+    lm, _ = make_prefill_step(cfg, max_seq=32)
+    params = lm.init(jax.random.key(0))
+    eng = Engine(cfg, params, max_seq=32)
+    p0 = obs.value("serve.prefill_calls")
+    d0 = obs.value("serve.decode_steps")
+    h0 = obs.snapshot()["histograms"].get(
+        "serve.decode_step_s", {"count": 0})["count"]
+    with obs.enabled_scope(True):
+        eng.generate({"tokens": jnp.zeros((2, 4), jnp.int32)}, steps=3)
+    names = [e["name"] for e in obs.events()]
+    assert names.count("serve.prefill") == 1
+    assert names.count("serve.decode_step") == 3
+    assert obs.value("serve.prefill_calls") == p0 + 1
+    assert obs.value("serve.decode_steps") == d0 + 3
+    hs = obs.snapshot()["histograms"]["serve.decode_step_s"]
+    assert hs["count"] == h0 + 3 and hs["min"] > 0
+    # cold engine: the first generate() compiles, and the probe sees it
+    prefill = next(e for e in obs.events() if e["name"] == "serve.prefill")
+    assert prefill["args"].get("new_traces", 0) >= 1
+
+
+def test_kernels_dispatch_counter():
+    name = "kernels.dispatch.sim_replay.xla"
+    n0 = obs.value(name)
+    kbackend.get_impl("sim_replay", backend="xla")
+    assert obs.value(name) == n0 + 1
+
+
+def test_catalog_covers_every_emitted_name(table):
+    with obs.enabled_scope(True):
+        compose(table, gainsight.TASKS[0], refine="simulate")
+    for e in obs.events():
+        assert catalog.covers(e["name"]), e["name"]
+    snap = obs.snapshot()
+    for section in ("counters", "gauges", "histograms"):
+        for name in snap[section]:
+            if name.startswith("t."):          # fixtures from this file
+                continue
+            assert catalog.covers(name), name
+
+
+# ------------------------------------------------------- bench perf-compare
+def test_compare_flatten_and_classify():
+    base = {"bench": "x", "quick": True, "table2_matches": 7,
+            "sweep": {"latency_s": 1.0, "rows_per_s": 100.0},
+            "best_labels": {"L1": "SRAM"}, "n_extra": 5}
+    # identical -> ok everywhere, env keys never judged
+    d = compare.diff_records(base, dict(base))
+    assert d["ok"] and not d["regressions"]
+    assert d["metrics"]["bench"]["status"] == "env"
+    assert d["metrics"]["sweep.rows_per_s"]["status"] == "ok"
+    # parity drift is a regression regardless of magnitude
+    cur = json.loads(json.dumps(base))
+    cur["table2_matches"] = 6
+    d = compare.diff_records(base, cur)
+    assert d["regressions"] == ["table2_matches"] and not d["ok"]
+    # label maps stay atomic and exact
+    cur = json.loads(json.dumps(base))
+    cur["best_labels"] = {"L1": "OS-Si GCRAM"}
+    assert compare.diff_records(base, cur)["regressions"] == ["best_labels"]
+    # throughput: 3x slower is a regression, 3x faster an improvement
+    cur = json.loads(json.dumps(base))
+    cur["sweep"]["rows_per_s"] = 30.0
+    d = compare.diff_records(base, cur)
+    assert d["metrics"]["sweep.rows_per_s"]["status"] == "regression"
+    cur["sweep"]["rows_per_s"] = 300.0
+    d = compare.diff_records(base, cur)
+    assert d["metrics"]["sweep.rows_per_s"]["status"] == "improved"
+    # latency inverts the rule; inside the band is ok
+    cur = json.loads(json.dumps(base))
+    cur["sweep"]["latency_s"] = 3.0
+    assert compare.diff_records(base, cur)["metrics"][
+        "sweep.latency_s"]["status"] == "regression"
+    cur["sweep"]["latency_s"] = 1.5
+    assert compare.diff_records(base, cur)["metrics"][
+        "sweep.latency_s"]["status"] == "ok"
+    # non-keyed numeric drift is informational
+    cur = json.loads(json.dumps(base))
+    cur["n_extra"] = 6
+    d = compare.diff_records(base, cur)
+    assert d["metrics"]["n_extra"]["status"] == "changed" and d["ok"]
+
+
+def test_compare_suite_and_missing_files(tmp_path):
+    bdir, cdir = tmp_path / "base", tmp_path / "cur"
+    bdir.mkdir(), cdir.mkdir()
+    rec = {"bench": "b", "table2_matches": 7, "rows_per_s": 10.0}
+    (bdir / "BENCH_a.json").write_text(json.dumps(rec))
+    (cdir / "BENCH_a.json").write_text(json.dumps(rec))
+    (bdir / "BENCH_gone.json").write_text(json.dumps(rec))
+    (cdir / "BENCH_diff.json").write_text("{}")     # never treated as a bench
+    diff = compare.diff_suite(bdir, cdir)
+    assert set(diff["benches"]) == {"BENCH_a.json", "BENCH_gone.json"}
+    assert diff["benches"]["BENCH_a.json"]["ok"]
+    assert diff["benches"]["BENCH_gone.json"]["status"] == "missing"
+    assert diff["ok"]                               # missing != regression
+    assert "BENCH_a.json" in compare.summarize(diff)
+
+
+def test_committed_baselines_match_suite_manifest():
+    """The committed baseline set is exactly the emitted BENCH file set
+    documented in benchmarks/run.py (the drift this PR closes)."""
+    from benchmarks.run import SUITE
+
+    baselines = sorted(
+        p.name for p in
+        (Path(__file__).resolve().parents[1] / "benchmarks"
+         / "baselines").glob("BENCH_*.json"))
+    assert baselines == sorted(fname for _, _, fname in SUITE)
