@@ -20,6 +20,7 @@ baselines live under ``benchmarks/baselines/``):
     BENCH_hetero_nlevel.json   benchmarks.hetero_nlevel
     BENCH_sim.json             benchmarks.sim_replay
     BENCH_corners.json         benchmarks.corner_sweep
+    BENCH_vdd.json             benchmarks.vdd_sweep
     BENCH_diff.json            the compare result (suite mode only)
 """
 from __future__ import annotations
@@ -40,6 +41,7 @@ SUITE = (
     ("hetero_nlevel", "benchmarks.hetero_nlevel", "BENCH_hetero_nlevel.json"),
     ("sim", "benchmarks.sim_replay", "BENCH_sim.json"),
     ("corners", "benchmarks.corner_sweep", "BENCH_corners.json"),
+    ("vdd", "benchmarks.vdd_sweep", "BENCH_vdd.json"),
 )
 
 

@@ -103,7 +103,8 @@ def _sim_inputs(J: int):
           jnp.ones((T, S), jnp.float32),
           jnp.full((T, S), 64.0, jnp.float32),
           jnp.full((T, S), 0.5, jnp.float32))
-    consts = jnp.asarray([1.0, 2.0], jnp.float32)
+    # [refresh_on, rewrite_overhead, adaptive_on, temp_drift_k, t_total_s]
+    consts = jnp.asarray([1.0, 2.0, 0.0, 0.0, 8e-5], jnp.float32)
     return (params, slot, xs, consts), {}
 
 

@@ -219,8 +219,9 @@ class DesignTable:
                 out = sanitize.maybe_wrap(chz.characterize_batch)(vecs)
                 metrics = {k: np.asarray(v) for k, v in out.items()}
             else:
-                out = sanitize.maybe_wrap(
-                    lambda v: chz.characterize_corners(v, ops))(vecs)
+                # characterize_corners sanitizes each per-corner dispatch
+                # itself (one jitted vmap per corner)
+                out = chz.characterize_corners(vecs, ops)
                 metrics = {}
                 for k, v in out.items():
                     grid = np.asarray(v)                    # (N, C)

@@ -182,13 +182,34 @@ characterize_corners_batch = jax.jit(
     jax.vmap(jax.vmap(characterize, in_axes=(None, 0)), in_axes=(0, None)))
 
 
+# one jitted vmap closure per corner: tp stays a python-float NamedTuple
+# closed over the trace, so XLA folds the very same constants the scalar
+# `_characterize_jit` path folds — per-corner columns are bit-identical to
+# the same corner characterized alone (a stacked traced-tp operand is not:
+# the algebraic simplifier reassociates constants differently there)
+@functools.lru_cache(maxsize=32)
+def _characterize_vmap_jit(tp):
+    return jax.jit(jax.vmap(functools.partial(characterize, tp=tp)))
+
+
 def characterize_corners(vecs, ops):
     """Characterize config vectors ``vecs`` (N, 7) at every operating point
-    of ``ops`` (OperatingPoints / corner names) in one vmapped dispatch.
+    of ``ops`` (OperatingPoints / corner names), one vmapped dispatch per
+    corner so each corner column is bit-exact with the scalar
+    ``characterize_config`` path at that corner.
 
     Returns a dict of (N, C) jnp arrays, corner order = ``ops`` order."""
-    tps = corners.stack_tech([corners.as_operating_point(o) for o in ops])
-    return characterize_corners_batch(vecs, tps)
+    import jax.numpy as jnp
+
+    from repro.analysis import sanitize
+    per_corner = []
+    for o in ops:
+        tp = corners.resolve(corners.as_operating_point(o))
+        fn = characterize_batch if tp == corners.NOMINAL_TECH \
+            else _characterize_vmap_jit(tp)
+        per_corner.append(sanitize.maybe_wrap(fn)(vecs))
+    return {k: jnp.stack([out[k] for out in per_corner], axis=1)
+            for k in per_corner[0]}
 
 
 # one jitted closure per corner: tp stays a python-float NamedTuple closed

@@ -181,8 +181,11 @@ def stack_tech(ops: Sequence[OperatingPoint]) -> TechParams:
     (designs x corners) vmap in ``characterize.characterize_corners``."""
     import jax.numpy as jnp
     tps = [TechParams.from_op(as_operating_point(op)) for op in ops]
-    return TechParams(*[jnp.asarray([getattr(t, f) for t in tps],
-                                    jnp.float32)
+    # stack in the pipeline's working float dtype (jnp.result_type(float):
+    # f32 under the default x64-off config) instead of a hard float32 cast,
+    # so the stacked values match what the scalar resolve() path traces
+    dtype = jnp.result_type(float)
+    return TechParams(*[jnp.asarray([getattr(t, f) for t in tps], dtype)
                         for f in TechParams._fields])
 
 

@@ -174,6 +174,11 @@ class BucketPick:
     bucket: Bucket
     family: object            # str | None
     config_idx: int
+    # set by the vdd-sweep compose path (repro.hetero): the operating point
+    # (a repro.core.corners.OperatingPoint) and scheduled refresh margin the
+    # pick is priced at; None = the table's base point / analytic default
+    op: object = None
+    refresh_margin: object = None   # float | None
 
 
 @dataclass(frozen=True)

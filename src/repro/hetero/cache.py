@@ -35,11 +35,14 @@ import numpy as np
 from repro.core.select import SelectionPolicy, TaskReq
 from repro.hetero.system import SYSTEM_METRICS, tiles_for
 
-_HETERO_SCHEMA = 4     # 2: truncated also reflects per-bucket caps; budgets
+_HETERO_SCHEMA = 5     # 2: truncated also reflects per-bucket caps; budgets
 #                         pin per-slot argmin rows into the grid
 #                      3: robust (worst-corner) mode keyed into the report
 #                      4: N-level/SystemBudget/search fields on ComposePolicy
 #                         (key-breaking) + search/n_space persisted in meta
+#                      5: vdd_sweep/refresh_margin_sweep on ComposePolicy
+#                         (key-breaking); persisted idx may be VIRTUAL rows
+#                         of the expanded grid (block * n_base + base)
 
 
 def _task_fingerprint(task: TaskReq) -> dict:
@@ -109,6 +112,7 @@ def load_report(cache_dir: Union[str, Path], table, task: TaskReq,
     """Reconstruct a cached ``CompositionReport`` for these exact inputs, or
     None on miss / unreadable file (the caller then recomputes and re-saves).
     """
+    from repro.hetero import expand as expand_mod
     from repro.hetero.compose import CompositionReport, _materialize
     key = report_key(table.grid_hash, task, policy, compose_policy,
                      robust=robust)
@@ -137,11 +141,16 @@ def load_report(cache_dir: Union[str, Path], table, task: TaskReq,
                       f"{idx.shape[1]} != task's {len(cap_bits)}",
                       RuntimeWarning, stacklevel=2)
         return None
-    tiles = tiles_for(table.metrics, idx, cap_bits)
+    # persisted rows may be virtual (vdd-swept) indices: tiling depends only
+    # on the op-invariant "bits" column, so fold back to physical rows for
+    # tiles_for and let _materialize decode the (block, base) split itself
+    points = expand_mod.expansion_points(compose_policy)
+    tiles = tiles_for(table.metrics, expand_mod.to_base(idx, len(table)),
+                      cap_bits)
     ranked = tuple(
         _materialize(table, task, idx[k], tiles[k],
                      {m: float(metric_rows[m][k]) for m in SYSTEM_METRICS},
-                     int(rank[k]), bool(feasible[k]))
+                     int(rank[k]), bool(feasible[k]), points=points)
         for k in range(idx.shape[0]))
     return CompositionReport(table=table, task=task, policy=policy,
                              compose_policy=compose_policy, ranked=ranked,

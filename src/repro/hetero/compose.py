@@ -27,8 +27,10 @@ from typing import Dict, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from repro import obs
+from repro.core import corners as corners_mod
 from repro.core.select import (BucketPick, LevelReq, SelectionPolicy,
                                TaskReq, as_task_req, composition_label)
+from repro.hetero import expand as expand_mod
 from repro.hetero.candidates import BucketCandidates, level_candidates
 from repro.hetero.search import balanced_norms, branch_and_bound
 from repro.hetero.system import (SYSTEM_METRICS, SystemBudget, score_grid,
@@ -41,6 +43,8 @@ SEARCH_MODES = ("auto", "exhaustive", "branch_and_bound")
 # repeat compose() re-ran neither the scoring nor the search)
 _C_CACHE_HIT = obs.counter("hetero.cache_hits")
 _C_CACHE_MISS = obs.counter("hetero.cache_misses")
+# swept (operating point x refresh margin) blocks built beyond the base one
+_C_EXPANDED = obs.counter("hetero.expanded_points")
 
 
 @dataclass(frozen=True)
@@ -84,6 +88,21 @@ class ComposePolicy:
     ``search_batch``  branch-and-bound scoring batch (fixed shape: one jit
         trace regardless of how many batches the search needs).
     ``top_k``  how many ranked compositions the report materializes.
+    ``vdd_sweep``  per-level (vdd, refresh-margin) co-optimization, axis 1:
+        supply points to search *in addition to* the table's base point.
+        Entries may be supply voltages [V] (paired with the nominal 300 K),
+        ``(vdd [V], temp_k [K])`` tuples, corner names, or full
+        ``repro.api.OperatingPoint``s; each adds a virtually re-characterized
+        block of every table row at that point (retention re-solved by the
+        transient solver, so refresh power follows the physics). Picks record
+        the winning point in ``BucketPick.op``.
+    ``refresh_margin_sweep``  axis 2: refresh safety margins (fractions of
+        solver retention, each in (0, 1]) to search besides the analytic
+        default; a block scheduled at margin ``m`` prices refresh at
+        ``p_refresh_w / m`` (1/m as many refreshes as refreshing exactly at
+        the retention wall). Crossed with ``vdd_sweep``. Winning margins land
+        in ``BucketPick.refresh_margin``. Both sweeps are incompatible with
+        ``compose(robust="worst_case")``.
     """
     objective: str = "preference"
     candidate_mode: str = "per_family_best"
@@ -96,6 +115,8 @@ class ComposePolicy:
     search_threshold: int = 200_000
     search_batch: int = 512
     top_k: int = 8
+    vdd_sweep: Tuple = ()
+    refresh_margin_sweep: Tuple[float, ...] = ()
 
     def __post_init__(self):
         if self.objective not in OBJECTIVES:
@@ -110,6 +131,30 @@ class ComposePolicy:
                 "pass chip envelopes either as budget=SystemBudget(...) or "
                 "via the legacy area_budget_um2/power_budget_w fields, "
                 "not both")
+        # normalize the sweeps once, here, so every downstream consumer
+        # (expansion, cache keys via dataclasses.asdict, report repr) sees
+        # canonical OperatingPoints / floats (frozen dataclass -> setattr)
+        pts = tuple(corners_mod.as_operating_point(
+            (float(p), corners_mod.NOMINAL.temp_k)
+            if isinstance(p, (int, float)) and not isinstance(p, bool)
+            else p) for p in self.vdd_sweep)
+        labels = [p.corner for p in pts]
+        if len(set(labels)) != len(labels):
+            raise ValueError(f"vdd_sweep labels collide: {labels}")
+        object.__setattr__(self, "vdd_sweep", pts)
+        margins = []
+        for m in self.refresh_margin_sweep:
+            m = float(m)
+            # same rule as repro.sim.refresh (not imported: hetero sits
+            # below sim): a margin must be a usable fraction of retention
+            if not math.isfinite(m) or not 0.0 < m <= 1.0:
+                raise ValueError(
+                    f"refresh_margin_sweep entries must be in (0, 1], "
+                    f"got {m!r}")
+            margins.append(m)
+        if len(set(margins)) != len(margins):
+            raise ValueError(f"refresh_margin_sweep repeats: {margins}")
+        object.__setattr__(self, "refresh_margin_sweep", tuple(margins))
 
     def system_budget(self) -> SystemBudget:
         """The effective chip-level budget: ``budget`` if given, else the
@@ -214,12 +259,24 @@ class CompositionReport:
         return all(got.get(lvl) == lab for lvl, lab in expected.items())
 
     def pick_macro(self, level: str, bucket: int = 0):
-        """The selected macro (as ``repro.api.Macro``) for one slot."""
+        """The selected macro (as ``repro.api.Macro``) for one slot.
+
+        A vdd-swept pick re-characterizes its config at the pick's operating
+        point (and scales refresh power by its scheduled margin), so the
+        returned PPA is the one the composition was actually priced at."""
         pick = self.best.levels[level].picks[bucket]
         if pick.config_idx < 0:
             raise LookupError(f"{self.task.task_id} {level} bucket {bucket} "
                               f"is infeasible under {self.policy}")
-        return self.table.macro(pick.config_idx)
+        if pick.op is None and pick.refresh_margin is None:
+            return self.table.macro(pick.config_idx)
+        from repro.api import Macro                 # runtime: avoids cycle
+        from repro.core import characterize as chz
+        cfg = self.table.config(pick.config_idx)
+        ppa = chz.characterize_config(cfg, tp=pick.op)
+        if pick.refresh_margin is not None:
+            ppa["p_refresh_w"] /= float(pick.refresh_margin)
+        return Macro(config=cfg, ppa=ppa)
 
     def summary(self) -> str:
         b = self.best
@@ -345,19 +402,30 @@ def _order(scores: Dict[str, np.ndarray], rank_sum: np.ndarray,
 
 def _materialize(table, task: TaskReq, idx_row: np.ndarray,
                  tiles_row: np.ndarray, metrics_row: Dict[str, float],
-                 rank: int, feasible: bool) -> Composition:
+                 rank: int, feasible: bool, points=None) -> Composition:
     """Build one Composition dataclass from a scored grid row (slot order:
-    levels in task order, buckets in bucket order)."""
+    levels in task order, buckets in bucket order).
+
+    ``points`` is the vdd-sweep block schedule (``expand.expansion_points``)
+    when the grid was virtually expanded: row indices then decode as
+    ``(block, base row)`` and each pick records its block's operating point
+    and refresh margin; ``config_idx`` is always a PHYSICAL table row."""
     fam_col = np.asarray(table.families)
+    n_base = len(fam_col)
     levels: Dict[str, LevelComposition] = {}
     s = 0
     for name, level in task.levels.items():
         picks, tiles = [], []
         for bucket in level.buckets:
             cfg = int(idx_row[s])
+            op = margin = None
+            if cfg >= 0 and points is not None and len(points) > 1:
+                block, cfg = divmod(cfg, n_base)
+                op, margin = points[block]
             fam = str(fam_col[cfg]) if cfg >= 0 else None
             picks.append(BucketPick(bucket=bucket, family=fam,
-                                    config_idx=cfg))
+                                    config_idx=cfg, op=op,
+                                    refresh_margin=margin))
             tiles.append(int(tiles_row[s]))
             s += 1
         levels[name] = LevelComposition(
@@ -421,6 +489,11 @@ def compose(space=None, task=None, policy: Optional[SelectionPolicy] = None,
                        {n: task.levels[n] for n in levels})
     policy = policy or SelectionPolicy()
     cp = compose_policy or ComposePolicy()
+    if robust is not None and (cp.vdd_sweep or cp.refresh_margin_sweep):
+        raise ValueError(
+            "vdd_sweep/refresh_margin_sweep cannot be combined with "
+            "robust='worst_case': worst-corner columns fold the corner axis "
+            "the sweep is searching over")
     table = DesignTable.build(space, cache=cache, corners=corners)
 
     def _refine(report: CompositionReport) -> CompositionReport:
@@ -451,6 +524,16 @@ def _compose_inner(table, task, policy, cp, cache, sharded, robust,
 
     metrics = table.robust_metrics(robust)
     fam_col = table.families
+    points = expand_mod.expansion_points(cp)
+    if len(points) > 1:
+        # virtual (operating point x refresh margin) expansion: every table
+        # row replicated per swept block, re-characterized at that block's
+        # supply/temperature (see repro.hetero.expand)
+        with obs.span("hetero.expand", n_points=len(points),
+                      n_base=len(fam_col)):
+            metrics, fam_col = expand_mod.expand_metrics(table, metrics,
+                                                         points)
+        _C_EXPANDED.inc(len(points) - 1)
     # candidate lists are ordered by the active objective's tiled slot
     # contribution so per-bucket caps and grid trimming discard the
     # objective's *worst* rows, not its best; active budgets pin their
@@ -500,7 +583,7 @@ def _compose_inner(table, task, policy, cp, cache, sharded, robust,
     ranked = tuple(
         _materialize(table, task, idx[j], tiles[k],
                      {m: float(scores[m][j]) for m in SYSTEM_METRICS},
-                     int(rank_sum[j]), bool(feasible[j]))
+                     int(rank_sum[j]), bool(feasible[j]), points=points)
         for k, j in enumerate(top))
     report = CompositionReport(table=table, task=task, policy=policy,
                                compose_policy=cp, ranked=ranked,

@@ -29,6 +29,9 @@ SPANS = {
     "hetero.search": ("repro.hetero.compose.compose",
                       "the grid ranking stage: exhaustive cross-product or "
                       "branch-and-bound enumeration"),
+    "hetero.expand": ("repro.hetero.compose.compose",
+                      "operating-point expansion: per-(vdd point x refresh "
+                      "margin) metric blocks for the vdd_sweep search axis"),
     "hetero.score": ("repro.hetero.system.score_grid[_corners]",
                      "one batched composition-scoring dispatch "
                      "(probe: the score jit — new_traces on first compile)"),
@@ -45,8 +48,11 @@ SPANS = {
                        "hosts only; single-device calls are plain)"),
     "serve.prefill": ("repro.serve.engine.Engine.generate",
                       "the prefill dispatch of one generate() call"),
+    "serve.sample": ("repro.serve.engine.Engine.generate",
+                     "host-side token sampling for one decode step"),
     "serve.decode_step": ("repro.serve.engine.Engine.generate",
-                          "one decode step (sample + decode dispatch)"),
+                          "one decode step's model decode dispatch (sampling "
+                          "and the host sync are outside this span)"),
 }
 
 # metric name -> (kind, what it counts/measures)
@@ -73,6 +79,9 @@ METRICS = {
     "hetero.search_pruned": (
         "counter", "compositions proven prunable by the bound "
         "(full cross-product size minus nodes scored)"),
+    "hetero.expanded_points": (
+        "counter", "virtual (operating point x refresh margin) metric "
+        "blocks built for vdd_sweep/refresh_margin_sweep searches"),
     "sim.replay_calls": (
         "counter", "batched trace-replay sweeps "
         "(backs sim.sim_eval_count — a sim-cache hit leaves it flat)"),
@@ -92,7 +101,9 @@ METRICS = {
     "serve.prefill_s": (
         "histogram", "wall time of each prefill dispatch [s]"),
     "serve.decode_step_s": (
-        "histogram", "wall time of each decode step [s]"),
+        "histogram", "wall time of each decode step's model dispatch [s]"),
+    "serve.sample_s": (
+        "histogram", "wall time of host-side sampling per decode step [s]"),
 }
 
 

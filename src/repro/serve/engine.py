@@ -22,6 +22,7 @@ _C_PREFILL = obs.counter("serve.prefill_calls")
 _C_DECODE = obs.counter("serve.decode_steps")
 _H_PREFILL_S = obs.histogram("serve.prefill_s")
 _H_DECODE_S = obs.histogram("serve.decode_step_s")
+_H_SAMPLE_S = obs.histogram("serve.sample_s")
 
 
 def make_prefill_step(cfg, max_seq: Optional[int] = None):
@@ -76,17 +77,23 @@ class Engine:
         outs = []
         cond = batch.get("cond")
         for i in range(steps):
+            # sampling is its own span/histogram: the decode span measures
+            # only the model decode dispatch, not the sampler or the
+            # np.asarray(tok) host sync that lands between them
             t0 = time.perf_counter()
-            with obs.span("serve.decode_step", probe=self._decode, step=i):
+            with obs.span("serve.sample", step=i):
                 if temperature is None:
                     tok = sample_greedy(logits)
                 else:
                     key, sk = jax.random.split(key)
                     tok = sample_temperature(sk, logits, temperature)
-                outs.append(np.asarray(tok))
-                dec_batch = {"tokens": tok}
-                if cond is not None:
-                    dec_batch["cond"] = cond
+            _H_SAMPLE_S.observe(time.perf_counter() - t0)
+            outs.append(np.asarray(tok))  # host sync, outside both spans
+            dec_batch = {"tokens": tok}
+            if cond is not None:
+                dec_batch["cond"] = cond
+            t0 = time.perf_counter()
+            with obs.span("serve.decode_step", probe=self._decode, step=i):
                 logits, cache = self._decode(self.params, cache, dec_batch)
             _C_DECODE.inc()
             _H_DECODE_S.observe(time.perf_counter() - t0)

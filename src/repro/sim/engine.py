@@ -64,6 +64,11 @@ SIM_METRICS = ("e_dyn_j", "e_refresh_j", "e_rewrite_j", "e_leak_j",
 # the repro.obs metrics registry, read through the thin alias below
 _C_REPLAYS = obs.counter("sim.replay_calls")
 
+# temperature-drift Arrhenius baseline: the solver's nominal die temperature
+# and activation ratio Ea/kB [K] (Ea = 0.5 eV, matching core.corners)
+_T_NOMINAL_K = 300.0
+_EA_OVER_KB_K = 0.5 / 8.617333262e-5
+
 
 def sim_eval_count() -> int:
     """Number of batched trace-replay sweeps executed so far
@@ -96,6 +101,22 @@ class SimPolicy:
                          intervals, expiry rewrites, and the retention wall
                          — requires a corner-batched DesignTable; None uses
                          the base ``retention_s``.
+    ``adaptive_refresh`` True: a per-bank refresh controller that adapts the
+                         effective interval to the observed traffic phase —
+                         demand writes rejuvenate the words they touch, so
+                         each bin's scheduled refresh ops are scaled by
+                         ``1 - turnover`` (the fraction of live data the
+                         bin's writes already rewrote). Write-heavy phases
+                         therefore stretch the refresh duty; read-mostly
+                         phases pay the full schedule.
+    ``temp_drift_k``     linear die-temperature drift [K] across each phase's
+                         replay window (300 K at t=0 → 300+drift at the end).
+                         Retention follows the solver's Arrhenius law
+                         (Ea=0.5 eV, as ``core.corners``) bin by bin inside
+                         the scan, shrinking refresh intervals and
+                         accelerating expiry rewrites as the die heats.
+                         0.0 (default) replays at constant temperature,
+                         bit-identical to the pre-drift engine.
     """
     phases: Tuple[str, ...] = ("prefill", "decode")
     duration_s: float = 1e-3
@@ -105,6 +126,8 @@ class SimPolicy:
     rewrite_overhead: float = 2.0
     objective: str = "energy"
     corner: Optional[str] = None
+    adaptive_refresh: bool = False
+    temp_drift_k: float = 0.0
 
     def __post_init__(self):
         if self.objective not in ("energy", "latency", "edp"):
@@ -113,6 +136,12 @@ class SimPolicy:
         unknown = set(self.phases) - {"prefill", "decode", "train_step"}
         if unknown:
             raise ValueError(f"unknown phases {sorted(unknown)}")
+        refresh_mod._check_margin(self.refresh_margin)
+        drift = float(self.temp_drift_k)
+        if not np.isfinite(drift) or _T_NOMINAL_K + drift <= 0.0:
+            raise ValueError(
+                f"temp_drift_k must be finite and keep the die above 0 K "
+                f"(baseline {_T_NOMINAL_K:g} K), got {self.temp_drift_k!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -126,30 +155,48 @@ def _sim_phase_one(params, slot, xs, consts):
     ``params``  dict of (S,) per-slot macro columns (gathered table rows).
     ``slot``    dict of (S,) slot requirement vectors (cap_bits, lifetime_s).
     ``xs``      (t_bin (T,), reads (T, S), write_bits (T, S), occ (T, S)).
-    ``consts``  (2,) f32: [refresh_on, rewrite_overhead].
+    ``consts``  (5,) f32: [refresh_on, rewrite_overhead, adaptive_on,
+                temp_drift_k, t_total_s].
     Returns a dict of scalar outputs keyed by SIM_METRICS.
+
+    Temperature drift and the adaptive controller live INSIDE the scan: each
+    bin scales retention by the Arrhenius factor of the current die
+    temperature (linear 300 K → 300+drift ramp over ``t_total_s``) before
+    deriving refresh need, interval, and expiry rate; the adaptive controller
+    then skips the fraction of scheduled refreshes the bin's own writes
+    already performed. Both collapse to exact multiplications by 1.0 when
+    disabled, keeping the base replay bit-identical.
     """
     p, s = params, slot
     eps = jnp.float32(1e-30)
     refresh_on, overhead = consts[0], consts[1]
-    need = refresh_mod.needs_refresh(p["retention_s"],
-                                     s["lifetime_s"]).astype(jnp.float32)
+    adaptive_on, drift_k, t_total = consts[2], consts[3], consts[4]
     num_words = p["bits"] / p["word_bits"]
     interval = p["interval_s"]
     cap_rate = p["tiles"] * p["f_op_hz"]             # port ops/s per slot
 
     def step(carry, x):
-        age, e_dyn, e_ref, e_rew, t_sim, coll, upk, apk = carry
+        age, e_dyn, e_ref, e_rew, t_sim, coll, upk, apk, t_acc = carry
         t_bin, reads, wbits, occ = x
+        # die temperature at this bin; retention Arrhenius scale vs 300 K
+        # (drift 0 -> exponent exactly 0 -> rs exactly 1.0)
+        t_now = _T_NOMINAL_K + drift_k * (t_acc / jnp.maximum(t_total, eps))
+        rs = jnp.exp(_EA_OVER_KB_K * (1.0 / t_now - 1.0 / _T_NOMINAL_K))
+        ret = p["retention_s"] * rs
+        need = refresh_mod.needs_refresh(
+            ret, s["lifetime_s"]).astype(jnp.float32)
         wops = wbits / p["word_bits"]
-        refr = refresh_on * need * refresh_mod.refresh_ops(
-            p["tiles"] * num_words, interval, occ, t_bin)
-        rewr = ((1.0 - refresh_on) * need * occ * s["cap_bits"] * t_bin
-                / jnp.maximum(p["retention_s"], eps) / p["word_bits"])
-        cap_ops = jnp.maximum(cap_rate * t_bin, eps)
-        util = (reads + wops + refr + rewr) / cap_ops
         turn = jnp.clip(wbits / jnp.maximum(occ * s["cap_bits"], eps),
                         0.0, 1.0)
+        # adaptive controller: writes are refreshes of the words they touch,
+        # so skip that fraction of the schedule (adaptive_on gates to 1.0)
+        refr = ((1.0 - adaptive_on * turn) * refresh_on * need
+                * refresh_mod.refresh_ops(
+                    p["tiles"] * num_words, interval * rs, occ, t_bin))
+        rewr = ((1.0 - refresh_on) * need * occ * s["cap_bits"] * t_bin
+                / jnp.maximum(ret, eps) / p["word_bits"])
+        cap_ops = jnp.maximum(cap_rate * t_bin, eps)
+        util = (reads + wops + refr + rewr) / cap_ops
         age = (age + t_bin) * (1.0 - turn)
         carry = (
             age,
@@ -160,13 +207,14 @@ def _sim_phase_one(params, slot, xs, consts):
             coll + jnp.sum(refr * jnp.minimum((reads + wops) / cap_ops, 1.0)),
             jnp.maximum(upk, jnp.max(util)),
             jnp.maximum(apk, jnp.max(age)),
+            t_acc + t_bin,
         )
         return carry, None
 
     S = p["bits"].shape[0]
     zero = jnp.float32(0.0)
-    carry0 = (jnp.zeros((S,), jnp.float32),) + (zero,) * 7
-    (age, e_dyn, e_ref, e_rew, t_sim, coll, upk, apk), _ = jax.lax.scan(
+    carry0 = (jnp.zeros((S,), jnp.float32),) + (zero,) * 8
+    (age, e_dyn, e_ref, e_rew, t_sim, coll, upk, apk, _), _ = jax.lax.scan(
         step, carry0, xs)
     t_wall = jnp.sum(xs[0])
     e_leak = jnp.sum(p["p_leak_w"] * p["tiles"]) * t_sim
@@ -260,8 +308,6 @@ def simulate_traces(cols: Mapping[str, np.ndarray], idx: np.ndarray,
     params = _gather_params(cols, idx, t0.cap_bits, policy)
     slot = {"cap_bits": jnp.asarray(t0.cap_bits, jnp.float32),
             "lifetime_s": jnp.asarray(t0.lifetime_s, jnp.float32)}
-    consts = jnp.asarray([1.0 if policy.refresh else 0.0,
-                          policy.rewrite_overhead], jnp.float32)
     from repro.analysis import sanitize
     impl = sanitize.maybe_wrap(_backend.get_impl("sim_replay", backend))
 
@@ -270,6 +316,12 @@ def simulate_traces(cols: Mapping[str, np.ndarray], idx: np.ndarray,
     with obs.span("sim.replay", J=int(idx.shape[0]), S=int(S),
                   phases=len(traces)):
         for tr in traces:
+            # the drift ramp spans each phase's own replay window
+            consts = jnp.asarray(
+                [1.0 if policy.refresh else 0.0, policy.rewrite_overhead,
+                 1.0 if policy.adaptive_refresh else 0.0,
+                 policy.temp_drift_k, float(np.sum(tr.t_bin_s))],
+                jnp.float32)
             xs = (jnp.asarray(tr.t_bin_s, jnp.float32),
                   jnp.asarray(tr.reads.T, jnp.float32),
                   jnp.asarray(tr.write_bits.T, jnp.float32),

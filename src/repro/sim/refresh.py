@@ -19,6 +19,7 @@ inputs alike (the engine calls them under jit).
 """
 from __future__ import annotations
 
+import math
 from typing import Mapping
 
 import numpy as np
@@ -29,11 +30,28 @@ import numpy as np
 DEFAULT_REFRESH_MARGIN = 0.8
 
 
+def _check_margin(margin: float) -> float:
+    """Validate a refresh safety margin at the python entry points.
+
+    A margin ≤ 0 would schedule negative/zero intervals (``refresh_ops``
+    divides by the interval) and a margin > 1 refreshes *after* the solver's
+    read-margin crossing — both silently nonsensical, so reject them loudly
+    here rather than inside the jit'd arithmetic."""
+    m = float(margin)
+    if not math.isfinite(m) or not 0.0 < m <= 1.0:
+        raise ValueError(
+            f"refresh margin must be in (0, 1] (a fraction of the solver's "
+            f"retention time; refreshing at or before the read-margin "
+            f"crossing), got {margin!r}")
+    return m
+
+
 def refresh_interval_s(retention_s, margin: float = DEFAULT_REFRESH_MARGIN):
     """Scheduled refresh interval [s] for a macro with ``retention_s`` [s].
 
-    Elementwise; works on scalars, numpy, and jnp arrays."""
-    return margin * retention_s
+    ``margin`` must be in (0, 1]. Elementwise; works on scalars, numpy, and
+    jnp arrays."""
+    return _check_margin(margin) * retention_s
 
 
 def retention_column(metrics: Mapping[str, np.ndarray],

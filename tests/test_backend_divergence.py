@@ -74,7 +74,9 @@ def _sim_replay_inputs():
           jnp.asarray(rng.uniform(0, 100, (T, S)), jnp.float32),
           jnp.asarray(rng.uniform(0, 512, (T, S)), jnp.float32),
           jnp.asarray(rng.uniform(0, 1, (T, S)), jnp.float32))
-    consts = jnp.asarray([1.0, 2.0], jnp.float32)
+    # drift + adaptive controller active so the divergence sweep exercises
+    # the in-scan Arrhenius/turnover terms too (T = 8 bins x 1e-5 s window)
+    consts = jnp.asarray([1.0, 2.0, 1.0, 45.0, 8e-5], jnp.float32)
     return (params, slot, xs, consts), {}
 
 

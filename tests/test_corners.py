@@ -78,11 +78,10 @@ def test_operating_point_coercion_and_validation():
 
 
 def test_nominal_corner_column_matches_plain_batch():
-    """The corner grid's nominal column must agree with the default path to
-    float32 round-off (the default path folds the nominal constants at
-    trace time; the batched corner axis evaluates them as traced f32, so
-    individual energy terms may differ by an ulp). The *default* path's
-    bit-for-bit parity is proved separately by tests/test_golden.py."""
+    """The corner grid's nominal column IS the default batch path (the
+    dispatcher routes nominal to ``characterize_batch``), so parity is
+    bit-for-bit — not merely to float32 round-off as in the old stacked
+    traced-tp implementation, whose simplifier reassociated constants."""
     import jax.numpy as jnp
     from repro.core import characterize as chz
     vecs = jnp.stack([c.to_vector() for c in small_space()[:8]])
@@ -91,7 +90,28 @@ def test_nominal_corner_column_matches_plain_batch():
     for k in plain:
         a = np.asarray(plain[k])
         b = np.asarray(grid[k])[:, 0]
-        np.testing.assert_allclose(a, b, rtol=1e-6, err_msg=f"metric {k}")
+        np.testing.assert_array_equal(a, b, err_msg=f"metric {k}")
+
+
+def test_batched_corners_bit_parity_with_scalar_path():
+    """Regression for the stack_tech float32 downcast: every named corner's
+    batched column must equal the scalar ``characterize_config`` result for
+    the SAME corner bit for bit — the per-corner vmap closes over the same
+    python-float TechParams the scalar jit folds, instead of a stacked
+    f32-downcast operand."""
+    import jax.numpy as jnp
+    from repro.core import characterize as chz
+    cfgs = small_space()[:6]
+    vecs = jnp.stack([c.to_vector() for c in cfgs])
+    ops = [corners.CORNERS[name] for name in sorted(corners.CORNERS)]
+    grid = chz.characterize_corners(vecs, ops)
+    for c, op in enumerate(ops):
+        for i, cfg in enumerate(cfgs):
+            scalar = chz.characterize_config(cfg, tp=op)
+            for k, v in scalar.items():
+                got = float(np.asarray(grid[k])[i, c])
+                assert got == v, (f"{op.corner}/{cfg.mem_type}[{k}]: "
+                                  f"batched {got!r} != scalar {v!r}")
 
 
 # ------------------------------------------------ physics monotonicity

@@ -314,6 +314,8 @@ def test_serve_engine_prefill_decode_spans():
     d0 = obs.value("serve.decode_steps")
     h0 = obs.snapshot()["histograms"].get(
         "serve.decode_step_s", {"count": 0})["count"]
+    s0 = obs.snapshot()["histograms"].get(
+        "serve.sample_s", {"count": 0})["count"]
     with obs.enabled_scope(True):
         eng.generate({"tokens": jnp.zeros((2, 4), jnp.int32)}, steps=3)
     names = [e["name"] for e in obs.events()]
@@ -326,6 +328,21 @@ def test_serve_engine_prefill_decode_spans():
     # cold engine: the first generate() compiles, and the probe sees it
     prefill = next(e for e in obs.events() if e["name"] == "serve.prefill")
     assert prefill["args"].get("new_traces", 0) >= 1
+    # sampling has its own span + histogram: decode_step time must no longer
+    # absorb the sampling math or the host sync (the timing-attribution fix)
+    assert names.count("serve.sample") == 3
+    ss = obs.snapshot()["histograms"]["serve.sample_s"]
+    assert ss["count"] == s0 + 3 and ss["min"] > 0
+    by_start = sorted((e for e in obs.events()
+                       if e["name"] in ("serve.decode_step", "serve.sample")),
+                      key=lambda e: e["ts"])
+    # the loop samples from the previous logits, then decodes: strict
+    # (sample, decode) alternation with disjoint spans — the host sync
+    # between them is charged to neither
+    for samp, dec in zip(by_start[::2], by_start[1::2]):
+        assert (samp["name"], dec["name"]) == ("serve.sample",
+                                               "serve.decode_step")
+        assert dec["ts"] >= samp["ts"] + samp["dur"]
 
 
 def test_kernels_dispatch_counter():

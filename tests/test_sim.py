@@ -320,6 +320,112 @@ def test_sim_cache_hits_and_key_sensitivity(tmp_path):
     assert api.characterize_call_count() == n_chz
 
 
+# ------------------------------------- adaptive refresh / temperature drift
+def test_adaptive_refresh_scales_by_write_turnover():
+    """Decode, flat occupancy: each bin's writes rewrite turn = wbits/cap of
+    the live data, so the adaptive controller must cut refresh energy by
+    exactly (1 - turn) — closed form, and strictly cheaper than the fixed
+    schedule in a write-heavy phase."""
+    d, life, ret, cap = 1e-3, 5e-4, 1e-4, 4096
+    cols = _toy_cols(retention_s=ret, bits=4096.0)
+    task = _one_slot_task(cap_bits=cap, f_hz=1e6, lifetime_s=life)
+    tr = phase_trace(task, "decode", duration_s=d, n_bins=8)
+    idx = np.array([[0]], np.int32)
+    base = simulate_traces(cols, idx, [tr], policy=SimPolicy(refresh=True))
+    adap = simulate_traces(cols, idx, [tr],
+                           policy=SimPolicy(refresh=True,
+                                            adaptive_refresh=True))
+    turn = float(tr.write_bits[0, 0]) / cap          # flat in decode
+    assert 0.0 < turn < 1.0
+    assert adap["e_refresh_j"][0] == pytest.approx(
+        (1.0 - turn) * base["e_refresh_j"][0], rel=1e-5)
+    assert adap["e_refresh_j"][0] < base["e_refresh_j"][0]
+    # reads/writes/leak untouched by the controller
+    assert adap["e_dyn_j"][0] == base["e_dyn_j"][0]
+    nw, interval = 4096 / 32.0, DEFAULT_REFRESH_MARGIN * ret
+    refr = nw * d / interval
+    assert base["e_refresh_j"][0] == pytest.approx(refr * 3e-12, rel=1e-5)
+
+
+def test_temp_drift_follows_arrhenius_closed_form():
+    """A linear 300->300+drift ramp across the window: refresh energy per bin
+    scales by 1/rs(T) with rs the solver's Arrhenius factor (Ea = 0.5 eV) —
+    recompute the whole scan by hand, and check drift monotonicity."""
+    from repro.sim.engine import _EA_OVER_KB_K, _T_NOMINAL_K
+    d, life, ret, drift, n = 1e-3, 1e-2, 1e-4, 60.0, 8
+    cols = _toy_cols(retention_s=ret)
+    task = _one_slot_task(cap_bits=1024, f_hz=1e6, lifetime_s=life)
+    tr = phase_trace(task, "decode", duration_s=d, n_bins=n)
+    idx = np.array([[0]], np.int32)
+    cold = simulate_traces(cols, idx, [tr], policy=SimPolicy(refresh=True))
+    hot = simulate_traces(cols, idx, [tr],
+                          policy=SimPolicy(refresh=True, temp_drift_k=drift))
+    t_bin = d / n
+    t_now = _T_NOMINAL_K + drift * (np.arange(n) * t_bin) / d
+    rs = np.exp(_EA_OVER_KB_K * (1.0 / t_now - 1.0 / _T_NOMINAL_K))
+    nw, interval = 1024 / 32.0, DEFAULT_REFRESH_MARGIN * ret
+    e_ref = np.sum(nw * t_bin / (interval * rs)) * 3e-12
+    assert hot["e_refresh_j"][0] == pytest.approx(e_ref, rel=1e-4)
+    assert hot["e_refresh_j"][0] > cold["e_refresh_j"][0]
+    # expiry path: the same ramp accelerates rewrites when refresh is off
+    cold_rw = simulate_traces(cols, idx, [tr],
+                              policy=SimPolicy(refresh=False))
+    hot_rw = simulate_traces(cols, idx, [tr],
+                             policy=SimPolicy(refresh=False,
+                                              temp_drift_k=drift))
+    assert hot_rw["e_rewrite_j"][0] > cold_rw["e_rewrite_j"][0]
+
+
+def test_cold_boost_scenario_prices_swept_levels(table):
+    """The ISSUE scenario end to end: the same GC macro replayed at the base
+    point and at the cold-boost (1.2 V, 233 K) sweep block, under the
+    adaptive controller + a heating die. The cold block's longer retention
+    must cut refresh energy, and xla must stay bit-exact vs interpret."""
+    from repro.core import corners
+    from repro.hetero import expand
+    pts = ((None, None),
+           (corners.as_operating_point((1.2, 233.0)), None))
+    metrics, fams = expand.expand_metrics(table, table.metrics, pts)
+    n = len(table)
+    # a GC row that actually refreshes: retention below the slot lifetime
+    gc = int(np.where((np.asarray(fams[:n]) != "sram6t")
+                      & (np.asarray(metrics["retention_s"][:n]) < 1e-3))[0][0])
+    assert metrics["retention_s"][n + gc] > metrics["retention_s"][gc]
+    cols = {k: np.asarray(metrics[k]) for k in
+            ("bits", "e_read_j", "e_write_j", "f_op_hz", "p_leak_w",
+             "retention_s")}
+    cols["word_bits"] = np.tile(np.asarray(table["word_size"], np.float64), 2)
+    task = _one_slot_task(cap_bits=1 << 20, f_hz=1e8, lifetime_s=1e-3)
+    tr = phase_trace(task, "decode", duration_s=1e-3, n_bins=16)
+    idx = np.array([[gc], [n + gc]], np.int32)   # base vs cold-boost block
+    policy = SimPolicy(refresh=True, adaptive_refresh=True, temp_drift_k=30.0)
+    out = simulate_traces(cols, idx, [tr], policy=policy, backend="xla")
+    assert np.all(np.isfinite(out["e_total_j"]))
+    assert out["e_refresh_j"][1] < out["e_refresh_j"][0]
+    ora = simulate_traces(cols, idx, [tr], policy=policy,
+                          backend="interpret")
+    for m in SIM_METRICS:
+        np.testing.assert_array_equal(out[m], ora[m], err_msg=m)
+
+
+def test_sim_policy_and_refresh_margin_validation():
+    """(0, 1] margin enforcement at every python entry point, plus the drift
+    sanity bound — jit-safe helpers (refresh_ops) stay unvalidated."""
+    from repro.sim.refresh import refresh_interval_s
+    for bad in (0.0, -1.0, 1.5, float("inf"), float("nan")):
+        with pytest.raises(ValueError, match="margin"):
+            refresh_interval_s(np.array([1e-3]), bad)
+        with pytest.raises(ValueError, match="margin"):
+            refresh_intervals({"retention_s": np.array([1e-3])}, margin=bad)
+        with pytest.raises(ValueError, match="margin"):
+            SimPolicy(refresh_margin=bad)
+    for bad in (float("nan"), float("inf"), -300.0, -350.0):
+        with pytest.raises(ValueError, match="temp_drift_k"):
+            SimPolicy(temp_drift_k=bad)
+    # disabled knobs replay bit-identically to the pre-drift engine defaults
+    assert SimPolicy() == SimPolicy(adaptive_refresh=False, temp_drift_k=0.0)
+
+
 # ------------------------------------------------------------------ profiler
 def test_arch_traces_from_synthetic_record():
     """The profiler's trace export: a dry-run record becomes a one-phase
